@@ -1,0 +1,68 @@
+"""Shared benchmark setup: the CPU-scale VoxCeleb-like task calibrated to
+paper-regime EERs (~4-15%), and the variant grid of paper Fig. 2."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.configs.ivector_tvm import CONFIG as IV_FULL
+from repro.core.pipeline import prepare, run_variant
+from repro.data.speech import SpeechDataConfig
+
+OUT_DIR = Path(__file__).resolve().parent / "results"
+
+# CPU-scale model (same family as the paper's 2048c/72d/400R system)
+BENCH_CFG = IV_FULL.with_overrides(
+    feat_dim=12, n_components=32, ivector_dim=24, posterior_top_k=8,
+    lda_dim=10, compute_dtype="float32", utts_per_batch=64,
+    frames_per_utt=40,
+)
+
+BENCH_DATA = SpeechDataConfig(
+    feat_dim=12, n_components=16, n_speakers=32, utts_per_speaker=8,
+    frames_per_utt=40, speaker_rank=10, channel_rank=6,
+    speaker_scale=0.35, channel_scale=1.4,
+)
+
+# the six variants of paper Fig. 2
+FIG2_VARIANTS = {
+    "standard": dict(formulation="standard", min_divergence=False,
+                     update_sigma=False),
+    "standard+mindiv": dict(formulation="standard", min_divergence=True,
+                            update_sigma=False),
+    "standard+sigma": dict(formulation="standard", min_divergence=False,
+                           update_sigma=True),
+    "standard+mindiv+sigma": dict(formulation="standard",
+                                  min_divergence=True, update_sigma=True),
+    "augmented": dict(formulation="augmented", min_divergence=True,
+                      update_sigma=False),
+    "augmented+sigma": dict(formulation="augmented", min_divergence=True,
+                            update_sigma=True),
+}
+
+
+def cached(name: str, fn):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    f = OUT_DIR / f"{name}.json"
+    if f.exists():
+        return json.loads(f.read_text())
+    t0 = time.time()
+    result = fn()
+    result["_seconds"] = round(time.time() - t0, 1)
+    f.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def ensemble_curves(cfg, n_iters, eval_every, seeds):
+    """Average EER curves over random T inits (the paper's methodology)."""
+    feats, labels, ubm = prepare(cfg, BENCH_DATA, seed=0)
+    curves = []
+    for s in seeds:
+        r = run_variant(cfg, feats, labels, ubm, n_iters,
+                        eval_every=eval_every, seed=s)
+        curves.append(r["curve"])
+    iters = [it for it, _ in curves[0]]
+    mean = [sum(c[i][1] for c in curves) / len(curves)
+            for i in range(len(iters))]
+    return iters, mean, curves

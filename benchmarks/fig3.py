@@ -1,0 +1,30 @@
+"""Paper Fig. 3: augmented formulation with frame-alignment (UBM) updates at
+varying intervals; realignment should match or beat the no-realign curve."""
+from __future__ import annotations
+
+from benchmarks.common import BENCH_CFG, cached, ensemble_curves
+
+
+def run(n_iters: int = 10, eval_every: int = 2, n_seeds: int = 2,
+        intervals=(0, 1, 2, 4)):
+    def compute():
+        out = {}
+        for k in intervals:
+            cfg = BENCH_CFG.with_overrides(
+                formulation="augmented", min_divergence=True,
+                update_sigma=True, realign_interval=k)
+            iters, mean, curves = ensemble_curves(
+                cfg, n_iters, eval_every, seeds=list(range(n_seeds)))
+            out[f"interval_{k}"] = {"iters": iters, "eer_mean": mean}
+        return out
+
+    res = cached(f"fig3_i{n_iters}_s{n_seeds}", compute)
+    rows = [(k, v["eer_mean"][-1]) for k, v in res.items()
+            if not k.startswith("_")]
+    return res, rows
+
+
+if __name__ == "__main__":
+    res, rows = run()
+    for name, eer in rows:
+        print(f"{name:12s} final EER {eer:.4f}")

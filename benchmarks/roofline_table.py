@@ -1,0 +1,59 @@
+"""Roofline table generator: collates the dry-run artifacts (deliverable g)
+into the EXPERIMENTS.md §Roofline table + per-cell derived quantities."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def load_rows(mesh: str = "single"):
+    rows = []
+    for f in sorted(glob.glob(str(REPO / "experiments/dryrun/*.json"))):
+        r = json.loads(Path(f).read_text())
+        if r.get("mesh") in (mesh, {"single": "16x16", "multi": "2x16x16"}[mesh]):
+            rows.append(r)
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = load_rows(mesh)
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant | "
+        "useful/HLO | roofline frac | mem/dev (GB) | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | — | SKIP: {r.get('reason','')[:70]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | — | ERROR |")
+            continue
+        mem = (r['peak_memory_per_device'] or 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.4f} | {mem:.1f} | |")
+    return "\n".join(lines)
+
+
+def summary(mesh: str = "single"):
+    rows = [r for r in load_rows(mesh) if r["status"] == "ok"]
+    count = {"compute": 0, "memory": 0, "collective": 0}
+    for r in rows:
+        count[r["dominant"]] += 1
+    return {"cells_ok": len(rows), "dominant_counts": count,
+            "mean_roofline_fraction":
+                sum(r["roofline_fraction"] for r in rows) / max(len(rows), 1)}
+
+
+if __name__ == "__main__":
+    print(markdown_table())
+    print()
+    print(summary())

@@ -1,0 +1,52 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (+ human-readable summaries).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    rows = []
+
+    # --- paper Fig. 2: variant grid, ensemble-averaged ---------------------
+    from benchmarks import fig2
+    res2, fig2_rows = fig2.run()
+    cl = fig2.claims(res2)
+    for name, eer in sorted(fig2_rows, key=lambda r: r[1]):
+        rows.append((f"fig2/{name}", "", f"final_eer={eer:.4f}"))
+    rows.append(("fig2/claims", "",
+                 ";".join(f"{k}={v}" for k, v in cl.items()
+                          if k != "final_eers")))
+
+    # --- paper Fig. 3: realignment intervals -------------------------------
+    from benchmarks import fig3
+    res3, fig3_rows = fig3.run()
+    for name, eer in fig3_rows:
+        rows.append((f"fig3/{name}", "", f"final_eer={eer:.4f}"))
+
+    # --- paper §4.2 speed table --------------------------------------------
+    from benchmarks import speed
+    sp = speed.run()
+    rows.append(("speed/alignment", f"{1e6 / sp['alignment_frames_per_s']:.3f}",
+                 f"x_realtime={sp['alignment_x_realtime']:.0f}"))
+    rows.append(("speed/extraction", "",
+                 f"x_realtime={sp['extraction_x_realtime']:.0f}"))
+    rows.append(("speed/em_iteration",
+                 f"{sp['em_iter_seconds_vectorized'] * 1e6:.0f}",
+                 f"speedup_vs_naive={sp['em_speedup_vs_naive']:.1f}x"))
+
+    # --- roofline table (deliverable g; from dry-run artifacts) ------------
+    from benchmarks import roofline_table
+    s = roofline_table.summary()
+    rows.append(("roofline/summary", "",
+                 f"cells_ok={s['cells_ok']};dominant={s['dominant_counts']};"
+                 f"mean_rf={s['mean_roofline_fraction']:.4f}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

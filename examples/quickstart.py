@@ -1,0 +1,33 @@
+"""Quickstart: the paper's pipeline end-to-end in ~2 minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.ivector_tvm import SMOKE
+from repro.core.pipeline import evaluate_state, prepare
+from repro.core import trainer as TR
+from repro.data.speech import SpeechDataConfig
+
+cfg = SMOKE.with_overrides(feat_dim=10, n_components=16, ivector_dim=16,
+                           posterior_top_k=8, lda_dim=10)
+data = SpeechDataConfig(feat_dim=10, n_components=12, n_speakers=20,
+                        utts_per_speaker=6, frames_per_utt=64,
+                        speaker_rank=8, channel_rank=4,
+                        speaker_scale=0.5, channel_scale=1.1)
+
+print("1. building synthetic VoxCeleb-like data + training the UBM ...")
+feats, labels, ubm = prepare(cfg, data)
+
+print("2. training the augmented-formulation i-vector extractor "
+      "(min-divergence on, Sigma updates on) ...")
+state = TR.train(cfg, ubm, feats, n_iters=4)
+
+print("3. extracting i-vectors -> LDA -> PLDA -> EER ...")
+eer = evaluate_state(cfg, state, feats, labels)
+print(f"   EER = {eer:.2%}  (random would be 50%)")
+
+print("4. the same model trained with UBM realignment (paper §3.2) ...")
+state2 = TR.train(cfg.with_overrides(realign_interval=1), ubm, feats,
+                  n_iters=4)
+print(f"   EER = {evaluate_state(cfg, state2, feats, labels):.2%}")

@@ -1,0 +1,26 @@
+"""Batched serving example: prefill a batch of prompts, decode with the KV
+cache, report throughput — the serving-side counterpart of the dry-run's
+decode_32k cells.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma-2b
+"""
+import argparse
+import sys
+
+from repro.launch import serve as serve_launcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=32)
+    args, _ = ap.parse_known_args()
+    sys.argv = ["serve", "--arch", args.arch, "--smoke",
+                "--batch", str(args.batch), "--prompt-len", "32",
+                "--gen", str(args.gen)]
+    serve_launcher.main()
+
+
+if __name__ == "__main__":
+    main()

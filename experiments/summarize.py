@@ -1,0 +1,20 @@
+import json, glob, sys
+rows = []
+for f in sorted(glob.glob("experiments/dryrun/*.json")):
+    r = json.load(open(f))
+    rows.append(r)
+def fmt(r):
+    if r["status"] != "ok":
+        return f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} {r['status']:8s} {r.get('reason', r.get('error',''))[:60]}"
+    return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} ok  "
+            f"tc={r['t_compute_s']:8.3f} tm={r['t_memory_s']:8.3f} tx={r['t_collective_s']:9.3f} "
+            f"dom={r['dominant']:10s} rf={r['roofline_fraction']:.4f} "
+            f"mem={r['peak_memory_per_device']/1e9 if r['peak_memory_per_device'] else 0:6.1f}GB "
+            f"({r.get('compile_seconds','-')}s)")
+for r in rows:
+    if r["mesh"] in ("single","16x16"):
+        print(fmt(r))
+print()
+n_ok = sum(r["status"]=="ok" for r in rows); n_skip = sum(r["status"]=="skipped" for r in rows)
+n_err = sum(r["status"]=="error" for r in rows)
+print(f"total={len(rows)} ok={n_ok} skipped={n_skip} error={n_err}")

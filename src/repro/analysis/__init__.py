@@ -1,0 +1,9 @@
+from repro.analysis.roofline import (
+    HW,
+    RooflineReport,
+    collective_bytes_from_hlo,
+    roofline_from_compiled,
+)
+
+__all__ = ["HW", "RooflineReport", "collective_bytes_from_hlo",
+           "roofline_from_compiled"]

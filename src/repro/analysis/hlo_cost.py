@@ -1,0 +1,409 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``HloCostAnalysis`` (what ``compiled.cost_analysis()``
+returns) counts each ``while`` body ONCE, so any scanned program (layer
+scans, flash-attention block scans, chunked-loss scans) under-reports FLOPs
+and bytes by the trip count. The optimized HLO, however, carries
+``backend_config={"known_trip_count": {"n": ...}}`` on every counted loop.
+
+This module re-derives, from ``compiled.as_text()``:
+  * flops           — 2 * prod(dot output dims) * prod(contracting dims),
+                      multiplied through nested while trip counts
+  * bytes           — per-op operand+output bytes (fusions counted as one
+                      kernel: operands + outputs only, mirroring HBM traffic
+                      of a fused kernel), multiplied through trip counts
+  * collective bytes— link-crossing bytes per collective kind (all-reduce
+                      counts 2x for its reduce-scatter + all-gather phases),
+                      multiplied through trip counts
+
+Numbers are PER-DEVICE (the partitioned module is per-device).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-\$]+)\s*(?:\(|\.)")
+_OP_LINE_RE = re.compile(
+    r"^\s*(ROOT\s+)?%([\w\.\-\$]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*?)\)(.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-\$]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-\$]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-\$]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "iota",
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(m.group(1), 4)
+    return total
+
+
+def _first_shape(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "f32", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    tail: str
+    is_root: bool = False
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    transcendentals: float = 0.0
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendentals += o.transcendentals
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m,
+                    {k: v * m for k, v in self.coll.items()},
+                    self.transcendentals * m)
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[_Op]] = {}
+        self.warnings: List[str] = []
+        self._memo: Dict[str, Cost] = {}
+        self._parse(hlo_text)
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and (line.endswith("{")
+                                             and ("->" in line or
+                                                  line.startswith(("ENTRY", "%")))):
+                m = _COMP_START_RE.match(line.replace("ENTRY ", "", 1)
+                                         if line.startswith("ENTRY") else line)
+                name = line.split("(")[0].replace("ENTRY", "").strip() \
+                    .lstrip("%").strip()
+                cur = name
+                self.comps[cur] = []
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _OP_LINE_RE.match(line)
+            if not m:
+                continue
+            root, name, type_str, opcode, opnds, tail = m.groups()
+            operands = [o.strip().lstrip("%") for o in opnds.split(",")
+                        if o.strip()]
+            self.comps[cur].append(
+                _Op(name, type_str, opcode, operands, tail, bool(root)))
+
+    # -- shape lookup -------------------------------------------------------
+
+    def _shape_of(self, comp: str, operand: str) -> Tuple[str, List[int]]:
+        for op in self.comps.get(comp, ()):
+            if op.name == operand:
+                return _first_shape(op.type_str)
+        return "f32", []
+
+    # -- cost ---------------------------------------------------------------
+
+    def comp_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()  # cycle guard
+        total = Cost()
+        for op in self.comps.get(comp, ()):
+            total += self._op_cost(comp, op)
+        self._memo[comp] = total
+        return total
+
+    def _op_cost(self, comp: str, op: _Op) -> Cost:
+        c = Cost()
+        oc = op.opcode
+        if oc == "while":
+            m = _TRIP_RE.search(op.tail)
+            trips = int(m.group(1)) if m else 1
+            if not m:
+                self.warnings.append(f"while {op.name}: no trip count")
+            b = _BODY_RE.search(op.tail)
+            if b:
+                c += self.comp_cost(b.group(1)).scaled(trips)
+            cond = _COND_RE.search(op.tail)
+            if cond:
+                c += self.comp_cost(cond.group(1)).scaled(trips)
+            return c
+        if oc == "conditional":
+            m = _BRANCHES_RE.search(op.tail)
+            if m:
+                branch_costs = [self.comp_cost(b.strip().lstrip("%"))
+                                for b in m.group(1).split(",")]
+                if branch_costs:
+                    best = max(branch_costs, key=lambda x: x.flops + x.bytes)
+                    c += best
+            return c
+        if oc in ("call", "async-start", "async-done"):
+            m = _CALLS_RE.search(op.tail)
+            if m:
+                c += self.comp_cost(m.group(1))
+            return c
+        if oc == "fusion":
+            # one fused kernel: HBM traffic = operands + outputs; but still
+            # pick up any dots living inside the fused computation
+            m = _CALLS_RE.search(op.tail)
+            if m:
+                inner = self.comp_cost(m.group(1))
+                c.flops += inner.flops
+                c.transcendentals += inner.transcendentals
+                for k, v in inner.coll.items():
+                    c.coll[k] = c.coll.get(k, 0.0) + v
+                c.bytes += self._fusion_bytes(comp, op, m.group(1))
+            else:
+                c.bytes += self._io_bytes(comp, op)
+            return c
+        if oc == "dot":
+            _, out = _first_shape(op.type_str)
+            n_out = 1
+            for d in out:
+                n_out *= d
+            cd = _LHS_CDIMS_RE.search(op.tail)
+            lhs_dtype, lhs = self._shape_of(comp, op.operands[0])
+            k = 1
+            if cd and cd.group(1):
+                for di in cd.group(1).split(","):
+                    if int(di) < len(lhs):
+                        k *= lhs[int(di)]
+            c.flops += 2.0 * n_out * k
+            c.bytes += self._io_bytes(comp, op)
+            return c
+        if oc in ("convolution",):
+            # not used by our models; approximate as output*2 flops
+            _, out = _first_shape(op.type_str)
+            n_out = 1
+            for d in out:
+                n_out *= d
+            c.flops += 2.0 * n_out
+            c.bytes += self._io_bytes(comp, op)
+            return c
+        for kind in _COLLECTIVES:
+            if oc.startswith(kind) and not oc.endswith("-done"):
+                b = float(_type_bytes(op.type_str))
+                # TPU-dtype projection: the CPU backend rewrites bf16 dots
+                # as convert-to-f32 + f32 dot, so collectives around them
+                # appear f32. If the operand chain converts up from a
+                # narrower dtype, a native-TPU lowering would have moved
+                # the narrow dtype — count those bytes.
+                scale = self._narrow_scale(comp, op)
+                b *= scale
+                if kind == "all-reduce":
+                    b *= 2
+                c.coll[kind] = c.coll.get(kind, 0.0) + b
+                c.bytes += self._io_bytes(comp, op)
+                return c
+        if oc in ("exponential", "log", "tanh", "rsqrt", "power", "logistic"):
+            _, out = _first_shape(op.type_str)
+            n = 1
+            for d in out:
+                n *= d
+            c.transcendentals += n
+        if oc not in _SKIP_BYTES:
+            c.bytes += self._io_bytes(comp, op)
+        return c
+
+    def _io_bytes(self, comp: str, op: _Op) -> float:
+        out_b = float(_type_bytes(op.type_str))
+        oc = op.opcode
+        # ops that touch only an output-sized window of their (possibly
+        # huge, loop-carried) operands: count the window, not the operand
+        if oc in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * out_b
+        if oc in ("dynamic-update-slice", "scatter"):
+            # read+write the updated window (operand 1), plus indices
+            upd = 0.0
+            if len(op.operands) > 1:
+                dt, shape = self._shape_of(comp, op.operands[1])
+                n = 1
+                for d in shape:
+                    n *= d
+                upd = n * _DTYPE_BYTES.get(dt, 4)
+            return 3.0 * upd
+        b = out_b
+        for o in op.operands:
+            dt, shape = self._shape_of(comp, o)
+            n = 1
+            for d in shape:
+                n *= d
+            b += n * _DTYPE_BYTES.get(dt, 4)
+        return b
+
+    def _narrow_scale(self, comp: str, op: _Op) -> float:
+        """1.0, or the width ratio if every operand is an upcast from a
+        narrower dtype (CPU-backend f32-dot artifact; see _op_cost)."""
+        out_dt, _ = _first_shape(op.type_str)
+        out_w = _DTYPE_BYTES.get(out_dt, 4)
+        widths = []
+        ops_by_name = {o.name: o for o in self.comps.get(comp, ())}
+        for name in op.operands:
+            src = ops_by_name.get(name)
+            depth = 0
+            while (src is not None and depth < 4
+                   and src.opcode in ("convert", "copy", "bitcast")
+                   and src.operands):
+                src = ops_by_name.get(src.operands[0])
+                depth += 1
+            if src is None:
+                return 1.0
+            dt, _ = _first_shape(src.type_str)
+            widths.append(_DTYPE_BYTES.get(dt, 4))
+        if widths and max(widths) < out_w:
+            return max(widths) / out_w
+        return 1.0
+
+    def _fusion_bytes(self, comp: str, op: _Op, called: str) -> float:
+        """HBM traffic of a fused kernel, window-aware.
+
+        A fusion parameter whose only in-fusion consumers are
+        (dynamic-)slice/gather ops is read window-sized, not full-sized;
+        a root that is (or tuples) dynamic-update-slice writes only its
+        update window (the rest of the buffer is aliased in place).
+        """
+        inner = self.comps.get(called, [])
+        by_name = {o.name: o for o in inner}
+        param_names = [o.name for o in inner if o.opcode == "parameter"]
+        param_by_idx = {}
+        for o in inner:
+            if o.opcode == "parameter" and o.operands:
+                try:
+                    param_by_idx[int(o.operands[0])] = o
+                except ValueError:
+                    pass
+        window_ops = ("dynamic-slice", "slice", "gather")
+
+        def consumers_of(name, depth=0):
+            """Consumers, looking through whole-buffer converts/bitcasts."""
+            outs = []
+            for o in inner:
+                if name in o.operands:
+                    if o.opcode in ("convert", "bitcast", "copy") and depth < 3:
+                        outs.extend(consumers_of(o.name, depth + 1))
+                    else:
+                        outs.append((o, name))
+            return outs
+
+        total = 0.0
+        for i, operand in enumerate(op.operands):
+            dt, shape = self._shape_of(comp, operand)
+            full = 1
+            for d in shape:
+                full *= d
+            full *= _DTYPE_BYTES.get(dt, 4)
+            pop = param_by_idx.get(i)
+            if pop is not None:
+                cons = consumers_of(pop.name)
+                if cons and all(
+                        o.opcode in window_ops and o.operands
+                        and o.operands[0] == via for o, via in cons):
+                    win = sum(_type_bytes(o.type_str) for o, _ in cons)
+                    total += min(full, win)
+                    continue
+                if cons and all(
+                        o.opcode == "dynamic-update-slice" and o.operands
+                        and o.operands[0] == via for o, via in cons):
+                    # in-place update destination: aliased, not read
+                    continue
+            total += full
+        # output side
+        roots = [o for o in inner if o.is_root]
+        root = roots[-1] if roots else (inner[-1] if inner else None)
+        out_full = float(_type_bytes(op.type_str))
+        if root is not None:
+            targets = []
+            if root.opcode == "tuple":
+                targets = [by_name.get(n) for n in root.operands]
+            else:
+                targets = [root]
+            out = 0.0
+            for t in targets:
+                if t is None:
+                    continue
+                # look through convert/bitcast/copy wrappers around a DUS
+                depth = 0
+                while (t is not None and t.opcode in ("convert", "bitcast",
+                                                      "copy")
+                       and t.operands and depth < 3):
+                    t = by_name.get(t.operands[0])
+                    depth += 1
+                if (t is not None and t.opcode == "dynamic-update-slice"
+                        and len(t.operands) > 1):
+                    u = by_name.get(t.operands[1])
+                    ub = (_type_bytes(u.type_str) if u is not None
+                          else _type_bytes(t.type_str))
+                    out += 2.0 * ub  # read window + write window
+                elif t is not None:
+                    out += float(_type_bytes(t.type_str))
+            total += min(out, out_full) if out else out_full
+        else:
+            total += out_full
+        return total
+
+    def total(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+
+def analyze_hlo(hlo_text: str) -> Dict:
+    model = HloCostModel(hlo_text)
+    t = model.total()
+    return {
+        "flops": t.flops,
+        "bytes": t.bytes,
+        "coll_bytes": t.coll_bytes,
+        "coll_by_kind": dict(t.coll),
+        "transcendentals": t.transcendentals,
+        "warnings": model.warnings[:20],
+    }

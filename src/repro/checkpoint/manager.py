@@ -1,0 +1,151 @@
+"""Mesh-agnostic checkpointing: atomic, versioned, elastic-restorable.
+
+Arrays are written as npz (one file per step) plus a JSON manifest holding
+the pytree structure, shapes, dtypes and the *logical* sharding axes. On
+restore the arrays are placed with NamedShardings built from the logical
+axes against WHATEVER mesh is active — so a checkpoint written on a
+(16, 16) mesh restores onto (8, 8), (2, 16, 16), or a single CPU device
+unchanged (elastic re-mesh). Writes are atomic (tmp dir + rename).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+SEP = "|"
+
+_NONNATIVE = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+              "float8_e5m2": np.uint8}
+
+
+def _encode(arr: np.ndarray):
+    name = str(arr.dtype)
+    if name in _NONNATIVE:
+        return arr.view(_NONNATIVE[name]), name
+    return arr, name
+
+
+def _decode(arr: np.ndarray, dtype_name: str):
+    if dtype_name in _NONNATIVE:
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _flatten(tree, is_leaf=None) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=is_leaf)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir, step: int, tree, logical_axes=None, extra: Optional[Dict] = None):
+    """Atomic checkpoint write. ``logical_axes``: matching pytree of axis
+    tuples (optional) stored for elastic restore."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {
+        "step": step,
+        "keys": {k: {"shape": list(np.shape(v)),
+                     "dtype": str(np.asarray(v).dtype)} for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    if logical_axes is not None:
+        manifest["axes"] = {
+            k: list(v) if v is not None else None
+            for k, v in _flatten(
+                logical_axes,
+                is_leaf=lambda x: x is None or isinstance(x, tuple)).items()}
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    try:
+        np.savez(tmp / "arrays.npz",
+                 **{k: _encode(np.asarray(v))[0] for k, v in flat.items()})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = ckpt_dir / f"step_{step:08d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    finally:
+        if tmp.exists():
+            shutil.rmtree(tmp, ignore_errors=True)
+    return ckpt_dir / f"step_{step:08d}"
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, tree_like, step: Optional[int] = None, rules=None):
+    """Restore into the structure of ``tree_like``. With ``rules`` active,
+    arrays are device_put with shardings rebuilt from stored logical axes."""
+    ckpt_dir = Path(ckpt_dir)
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "arrays.npz")
+    flat_like = _flatten(tree_like)
+    out = {}
+    axes = manifest.get("axes", {})
+    for k in flat_like:
+        arr = _decode(data[k], manifest["keys"][k]["dtype"])
+        if rules is not None and k in axes and axes[k] is not None:
+            sh = rules.sharding(arr.shape, tuple(axes[k]))
+            out[k] = jax.device_put(arr, sh)
+        else:
+            out[k] = jax.numpy.asarray(arr)
+    # rebuild tree
+    leaves_keys = [SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+                   for path, _ in jax.tree_util.tree_flatten_with_path(
+                       tree_like)[0]]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    leaves = [out[k] for k in leaves_keys]
+    return jax.tree_util.tree_unflatten(treedef, leaves), step, \
+        manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """Interval-based manager with retention and restart support."""
+
+    def __init__(self, ckpt_dir, save_interval: int = 100, keep: int = 3,
+                 logical_axes=None, rules=None):
+        self.dir = Path(ckpt_dir)
+        self.save_interval = save_interval
+        self.keep = keep
+        self.logical_axes = logical_axes
+        self.rules = rules
+
+    def maybe_save(self, step: int, tree, extra=None, force=False):
+        if not force and (step % self.save_interval != 0):
+            return None
+        p = save(self.dir, step, tree, self.logical_axes, extra)
+        self._gc()
+        return p
+
+    def _gc(self):
+        steps = sorted(p for p in self.dir.glob("step_*"))
+        for p in steps[:-self.keep]:
+            shutil.rmtree(p, ignore_errors=True)
+
+    def restore_latest(self, tree_like):
+        return restore(self.dir, tree_like, rules=self.rules)
+
+    def has_checkpoint(self) -> bool:
+        return latest_step(self.dir) is not None

@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ALL_SHAPES,
+    ARCH_IDS,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    EncoderConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    ShapeConfig,
+    SSMConfig,
+    get_config,
+    get_shape,
+)
+from repro.configs.ivector_tvm import IVectorConfig
+
+__all__ = [
+    "ALL_SHAPES", "ARCH_IDS", "DECODE_32K", "LONG_500K", "PREFILL_32K",
+    "TRAIN_4K", "EncoderConfig", "ModelConfig", "MoEConfig", "RWKVConfig",
+    "ShapeConfig", "SSMConfig", "get_config", "get_shape", "IVectorConfig",
+]

@@ -1,0 +1,174 @@
+"""Config system: model/shape/mesh/run dataclasses + arch registry.
+
+Every assigned architecture is a ``ModelConfig`` in ``src/repro/configs/<id>.py``
+exposing ``CONFIG`` (full published dims) and ``SMOKE`` (reduced same-family
+config for CPU tests). ``repro.configs.get_config(arch_id)`` resolves either.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned input-shape set; identical across LM-family archs)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape. ``kind`` selects which step gets lowered."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; have {[s.name for s in ALL_SHAPES]}")
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    # arctic-style dense MLP residual running in parallel with the MoE branch
+    dense_residual_d_ff: int = 0
+    # which layers are MoE: 'all' | 'every_other' (odd layers, jamba-style)
+    layout: str = "all"
+    router_aux_loss: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-1 selective-SSM hyperparameters (jamba's SSM layers)."""
+
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model/16)
+    # dtype of the associative-scan transition tensors; bf16 halves the
+    # memory-bound selective scan's HBM traffic (decay factors are <= 1 so
+    # products stay representable); f32 for tests/smoke
+    scan_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64   # low-rank dim of the data-dependent decay MLP
+    tokenshift_lora: int = 32
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder tower for enc-dec (whisper) / frontend for VLM (internvl)."""
+
+    n_layers: int = 0
+    n_frames: int = 0        # whisper: post-conv frames; vlm: image patches
+    frontend_dim: int = 0    # raw embedding dim provided by the stub frontend
+    is_causal: bool = False
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # 'dense' | 'moe' | 'ssm' | 'audio' | 'vlm' | 'hybrid'
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    mlp_variant: str = "swiglu"  # 'swiglu' | 'geglu' | 'relu2' | 'gelu'
+    norm: str = "rmsnorm"  # 'rmsnorm' | 'layernorm'
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    # hybrid (jamba): one attention layer every `attn_period` layers; others SSM
+    attn_period: int = 0
+    # ``long_500k`` requires sub-quadratic sequence mixing
+    subquadratic: bool = False
+    # activation / param dtypes (strings keep configs hashable + serializable)
+    param_dtype: str = "bfloat16"
+    activation_dtype: str = "bfloat16"
+    # AdamW moment dtype; 480B-scale configs use bf16 moments to fit HBM
+    opt_state_dtype: str = "float32"
+    # remat ('nothing' | 'layer' = save layer boundaries only)
+    remat: str = "layer"
+    # gradient-accumulation microbatches per step (1 = none); recurrent
+    # archs use this to bound layer-boundary save memory since their scan
+    # axis (sequence) cannot shard over the model axis
+    grad_accum: int = 1
+    # attention kv-chunk size for the online-softmax (flash-style) attention
+    attn_chunk: int = 1024
+    note: str = ""
+
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def shape_applicability(self, shape: ShapeConfig) -> Tuple[bool, str]:
+        """(runnable, reason-if-skipped) for an assigned (arch x shape) cell."""
+        if shape.name == "long_500k" and not self.subquadratic:
+            return False, "full quadratic attention; 512k decode cache infeasible"
+        return True, ""
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = (
+    "nemotron-4-15b",
+    "phi3-medium-14b",
+    "gemma-2b",
+    "stablelm-1.6b",
+    "arctic-480b",
+    "moonshot-v1-16b-a3b",
+    "rwkv6-7b",
+    "whisper-large-v3",
+    "internvl2-1b",
+    "jamba-v0.1-52b",
+    # the paper's own model, registered as an arch so it runs through the same
+    # dry-run / roofline machinery (extra row, not one of the 40 cells)
+    "ivector-tvm",
+)
+
+
+def _module_for(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str, smoke: bool = False):
+    """Resolve an arch id to its ModelConfig (or IVectorConfig)."""
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(_module_for(arch_id))
+    return mod.SMOKE if smoke else mod.CONFIG

@@ -1,0 +1,55 @@
+"""The paper's own model: Kaldi-VoxCeleb-scale total-variability i-vector system.
+
+Full config matches the paper's §4.1 setup: 72-dim MFCC(+deltas) features,
+2048-component full-covariance UBM, rank-400 total-variability matrix,
+augmented (Kaldi) formulation with prior offset p=100, LDA 400->200, PLDA.
+
+``SMOKE`` is the CPU-scale reduction used by tests and benchmarks.
+"""
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class IVectorConfig:
+    arch_id: str = "ivector-tvm"
+    family: str = "ivector"
+    feat_dim: int = 72           # MFCC + delta + double-delta
+    n_components: int = 2048     # UBM Gaussians (full covariance)
+    ivector_dim: int = 400       # total-variability rank
+    formulation: str = "augmented"  # 'standard' | 'augmented'
+    prior_offset: float = 100.0  # Kaldi's p (augmented formulation only)
+    min_divergence: bool = True
+    update_sigma: bool = True
+    realign_interval: int = 0    # 0 = never; k = realign every k EM iters
+    n_iters: int = 22            # paper: 22 iterations suffice
+    # alignment (paper §4.2): top-K pruning + posterior floor + renormalise
+    posterior_top_k: int = 20
+    posterior_floor: float = 0.025
+    # training-batch geometry for the distributed EM step. The paper's GPU
+    # processed one small batch; a 256-chip pod weak-scales the E-step:
+    # 8192 utts/macro-step (32/chip) amortizes the fixed [C,R,R] accumulator
+    # psums (EXPERIMENTS.md §Perf ivector iter 1: rf 0.002 -> see table)
+    utts_per_batch: int = 8192   # global; sharded over (pod, data)
+    frames_per_utt: int = 1024   # fixed-size frame batches (paper Fig. 1)
+    lda_dim: int = 200
+    param_dtype: str = "float32"
+    # stats/matmul compute dtype; bf16 w/ fp32 accumulation on TPU
+    compute_dtype: str = "bfloat16"
+
+    def with_overrides(self, **kw) -> "IVectorConfig":
+        return replace(self, **kw)
+
+
+CONFIG = IVectorConfig()
+
+SMOKE = CONFIG.with_overrides(
+    feat_dim=12,
+    n_components=32,
+    ivector_dim=24,
+    posterior_top_k=8,
+    utts_per_batch=16,
+    frames_per_utt=64,
+    lda_dim=8,
+    n_iters=3,
+    compute_dtype="float32",
+)

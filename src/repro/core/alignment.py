@@ -1,0 +1,59 @@
+"""Frame alignment: posterior computation with Kaldi's pruning recipe
+(paper §4.2), adapted to TPU (DESIGN.md §2).
+
+1. diagonal-covariance preselection scores (cheap matmul),
+2. full-covariance log-likelihoods evaluated DENSELY (vec-trick matmul; on
+   TPU the dense MXU path beats gathered sparse evaluation),
+3. intersect with the diag top-K preselection, drop posteriors < floor,
+   renormalise to sum 1.
+
+Output is sparse: (values [F, K], indices [F, K]) — the compact form the
+paper stores to disk; here it flows straight into Baum-Welch accumulation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ubm as U
+
+f32 = jnp.float32
+
+
+class SparsePosteriors(NamedTuple):
+    values: jax.Array   # [F, K] renormalised posteriors (zeros where pruned)
+    indices: jax.Array  # [F, K] component ids
+
+
+def align_frames(x, full: U.FullGMM, diag: U.DiagGMM, *, top_k: int = 20,
+                 floor: float = 0.025, precomp=None) -> SparsePosteriors:
+    """x: [F, D] -> sparse pruned-renormalised posteriors.
+
+    Follows Kaldi/the paper: preselect with the diag UBM, score the
+    selected components with the full UBM, floor + renormalise. The dense
+    TPU adaptation evaluates full-cov loglik for all C and masks to the
+    diag-selected set (identical result, matmul-friendly).
+    """
+    diag_ll = U.diag_loglik(diag, x)                       # [F, C]
+    _, sel = jax.lax.top_k(diag_ll, top_k)                 # [F, K]
+    full_ll = U.full_loglik(full, x, precomp=precomp)      # [F, C]
+    # gather selected lls, softmax over the selected set only
+    sel_ll = jnp.take_along_axis(full_ll, sel, axis=1)     # [F, K]
+    sel_ll = sel_ll - jax.scipy.special.logsumexp(sel_ll, axis=1,
+                                                  keepdims=True)
+    post = jnp.exp(sel_ll)
+    # floor + renormalise (paper: drop < 0.025, rescale to sum 1)
+    post = jnp.where(post < floor, 0.0, post)
+    post = post / jnp.maximum(jnp.sum(post, axis=1, keepdims=True), 1e-10)
+    return SparsePosteriors(post.astype(f32), sel)
+
+
+def densify(post: SparsePosteriors, C: int) -> jax.Array:
+    """[F, K] sparse -> [F, C] dense (tests / small-scale CPU paths)."""
+    F, K = post.values.shape
+    dense = jnp.zeros((F, C), f32)
+    rows = jnp.broadcast_to(jnp.arange(F)[:, None], (F, K))
+    return dense.at[rows.reshape(-1), post.indices.reshape(-1)].add(
+        post.values.reshape(-1))

@@ -1,0 +1,127 @@
+"""Scoring backend: centring, whitening, length-norm, LDA, two-covariance
+PLDA, EER — the paper's §4.1 evaluation chain. Training of the small
+projection/scoring models runs on host (numpy/scipy); scoring is jnp."""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.linalg as sla
+
+f32 = jnp.float32
+
+
+def length_norm(x):
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-10)
+
+
+def whitener(x) -> Tuple[jax.Array, jax.Array]:
+    """(mean, W) with W whitening the centred data."""
+    mu = jnp.mean(x, axis=0)
+    xc = x - mu
+    cov = xc.T @ xc / x.shape[0] + 1e-6 * jnp.eye(x.shape[1])
+    lam, Q = jnp.linalg.eigh(cov)
+    W = (Q * jnp.maximum(lam, 1e-10) ** -0.5) @ Q.T
+    return mu, W
+
+
+class LDA(NamedTuple):
+    mean: jax.Array
+    proj: jax.Array  # [D, K]
+
+
+def train_lda(x, labels, out_dim: int) -> LDA:
+    """Classic Fisher LDA via generalized eigenproblem Sb v = λ Sw v."""
+    x = np.asarray(x, np.float64)
+    labels = np.asarray(labels)
+    classes = np.unique(labels)
+    mu = x.mean(axis=0)
+    D = x.shape[1]
+    Sw = np.zeros((D, D))
+    Sb = np.zeros((D, D))
+    for c in classes:
+        xc = x[labels == c]
+        mc = xc.mean(axis=0)
+        d = xc - mc
+        Sw += d.T @ d
+        g = (mc - mu)[:, None]
+        Sb += xc.shape[0] * (g @ g.T)
+    Sw = Sw / x.shape[0] + 1e-4 * np.eye(D)
+    Sb = Sb / x.shape[0]
+    evals, evecs = sla.eigh(Sb, Sw)
+    order = np.argsort(evals)[::-1][:out_dim]
+    return LDA(jnp.asarray(mu, f32), jnp.asarray(evecs[:, order], f32))
+
+
+def apply_lda(lda: LDA, x):
+    return (x - lda.mean) @ lda.proj
+
+
+class PLDA(NamedTuple):
+    mean: jax.Array
+    B: jax.Array  # between-class covariance
+    W: jax.Array  # within-class covariance
+
+
+def train_plda(x, labels) -> PLDA:
+    """Two-covariance PLDA from moment estimates."""
+    x = np.asarray(x, np.float64)
+    labels = np.asarray(labels)
+    classes = np.unique(labels)
+    mu = x.mean(axis=0)
+    D = x.shape[1]
+    Sw = np.zeros((D, D))
+    means = []
+    for c in classes:
+        xc = x[labels == c]
+        mc = xc.mean(axis=0)
+        means.append(mc)
+        d = xc - mc
+        Sw += d.T @ d
+    Sw = Sw / x.shape[0]
+    M = np.stack(means) - mu
+    Sb = M.T @ M / len(classes)
+    eye = np.eye(D)
+    return PLDA(jnp.asarray(mu, f32), jnp.asarray(Sb + 1e-6 * eye, f32),
+                jnp.asarray(Sw + 1e-6 * eye, f32))
+
+
+def plda_score_matrix(plda: PLDA, enroll, test) -> jax.Array:
+    """LLR for every (enroll, test) pair under the two-covariance model:
+
+    llr = log N([x;y]; 0, [[T, B],[B, T]]) - log N([x;y]; 0, [[T, 0],[0, T]])
+    with T = B + W; expands to 0.5 x'Qx + 0.5 y'Qy + x'Py + const.
+    """
+    B, W = plda.B, plda.W
+    T = B + W
+    Tinv = jnp.linalg.inv(T)
+    S = T - B @ Tinv @ B          # Schur complement
+    Sinv = jnp.linalg.inv(S)
+    Q = Tinv - Sinv               # x'Qx coefficient
+    P = Sinv @ B @ Tinv           # cross coefficient
+    x = enroll - plda.mean
+    y = test - plda.mean
+    qx = jnp.sum((x @ Q) * x, axis=1)
+    qy = jnp.sum((y @ Q) * y, axis=1)
+    cross = (x @ P) @ y.T
+    _, logdet_joint = jnp.linalg.slogdet(jnp.block([[T, B], [B, T]]))
+    _, logdet_ind = jnp.linalg.slogdet(T)
+    const = -0.5 * (logdet_joint - 2.0 * logdet_ind)
+    return 0.5 * (qx[:, None] + qy[None, :]) + cross + const
+
+
+def eer(scores, labels) -> float:
+    """Equal error rate; scores: [N], labels: [N] (1 target, 0 nontarget)."""
+    s = np.asarray(scores, np.float64)
+    l = np.asarray(labels)
+    order = np.argsort(s)
+    l_sorted = l[order]
+    n_tar = max(int(l_sorted.sum()), 1)
+    n_non = max(int((1 - l_sorted).sum()), 1)
+    # sweeping the threshold upward: miss grows, false-alarm shrinks
+    miss = np.concatenate([[0.0], np.cumsum(l_sorted) / n_tar])
+    fa = np.concatenate([[1.0], 1.0 - np.cumsum(1 - l_sorted) / n_non])
+    idx = np.argmin(np.abs(miss - fa))
+    return float(0.5 * (miss[idx] + fa[idx]))

@@ -1,0 +1,72 @@
+"""Baum-Welch statistics (paper §2, Kenny 2012 definitions).
+
+For utterance u with frames x_t and posteriors gamma_tc:
+    n_c  = sum_t gamma_tc                  (occupancy, zeroth order)
+    f_c  = sum_t gamma_tc x_t              (first order)
+    S_c  = sum_t gamma_tc x_t x_t^T        (second order)
+
+Convention (paper §2): the STANDARD formulation centres f and S around the
+UBM means; the AUGMENTED (Kaldi) formulation uses raw statistics.
+``repro.kernels.bw_stats`` provides the fused Pallas second-order kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.alignment import SparsePosteriors
+
+f32 = jnp.float32
+
+
+class BWStats(NamedTuple):
+    n: jax.Array   # [U, C]
+    f: jax.Array   # [U, C, D]
+    S: Optional[jax.Array] = None  # [C, D, D] (summed over utts; Σ update)
+
+
+def accumulate(x, post: SparsePosteriors, C: int,
+               second_order: bool = False) -> BWStats:
+    """x: [F, D] single utterance -> per-utterance stats (U dim absent)."""
+    F, D = x.shape
+    K = post.values.shape[1]
+    rows = post.indices.reshape(-1)            # [F*K]
+    vals = post.values.reshape(-1)             # [F*K]
+    n = jnp.zeros((C,), f32).at[rows].add(vals)
+    xw = (post.values[:, :, None] * x[:, None, :]).reshape(F * K, D)
+    f = jnp.zeros((C, D), f32).at[rows].add(xw)
+    S = None
+    if second_order:
+        x2 = (x[:, :, None] * x[:, None, :]).reshape(F, D * D)
+        x2w = (post.values[:, :, None] * x2[:, None, :]).reshape(F * K, D * D)
+        S = jnp.zeros((C, D * D), f32).at[rows].add(x2w).reshape(C, D, D)
+    return BWStats(n, f, S)
+
+
+def accumulate_batch(xs, posts: SparsePosteriors, C: int,
+                     second_order: bool = False) -> BWStats:
+    """xs: [U, F, D]; posts values/indices: [U, F, K] -> batched stats.
+
+    n, f keep the utterance dim (the TVM E-step needs per-utterance stats);
+    S is summed over utterances (only its total enters the Σ update).
+    """
+    fn = jax.vmap(lambda x, v, i: accumulate(
+        x, SparsePosteriors(v, i), C, second_order))
+    st = fn(xs, posts.values, posts.indices)
+    S = jnp.sum(st.S, axis=0) if second_order else None
+    return BWStats(st.n, st.f, S)
+
+
+def center(stats: BWStats, means) -> BWStats:
+    """Centre first/second-order stats around UBM means (standard form)."""
+    f = stats.f - stats.n[..., None] * means[None]
+    S = stats.S
+    if S is not None:
+        n_tot = jnp.sum(stats.n, axis=0)
+        f_tot = jnp.sum(stats.f, axis=0)
+        S = (S - f_tot[:, :, None] * means[:, None, :]
+             - means[:, :, None] * f_tot[:, None, :]
+             + n_tot[:, None, None] * means[:, :, None] * means[:, None, :])
+    return BWStats(stats.n, f, S)

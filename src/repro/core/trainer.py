@@ -1,0 +1,118 @@
+"""TVMTrainer: the paper's §3.2 five-step training loop, jitted end-to-end,
+with every Fig.-2/3 variant switchable:
+
+  formulation   'standard' | 'augmented'
+  min_divergence / update_sigma / realign_interval
+
+One EM iteration = (realign if due) -> E-step over utterance minibatches ->
+M-step -> min-divergence -> UBM-mean write-back. Batched over utterances so
+the same code runs CPU-small and pod-scale (utterances shard over 'data',
+components over 'model'; see launch/ivector_cell.py for the mesh lowering).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.ivector_tvm import IVectorConfig
+from repro.core import alignment as AL
+from repro.core import stats as ST
+from repro.core import tvm as TV
+from repro.core import ubm as U
+
+f32 = jnp.float32
+
+
+@dataclass
+class TrainState:
+    model: TV.TVModel
+    ubm: U.FullGMM
+    iteration: int = 0
+
+
+def _align_and_stats(cfg: IVectorConfig, ubm: U.FullGMM, feats,
+                     second_order: bool):
+    """feats: [U, F, D] -> BWStats (n [U,C], f [U,C,D], S [C,D,D]|None)."""
+    diag = ubm.to_diag()
+    pre = U.full_precisions(ubm)
+    post = jax.vmap(lambda x: AL.align_frames(
+        x, ubm, diag, top_k=cfg.posterior_top_k, floor=cfg.posterior_floor,
+        precomp=pre))(feats)
+    return ST.accumulate_batch(feats, post, cfg.n_components,
+                               second_order=second_order)
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=64)
+def make_stats_fn(cfg: IVectorConfig):
+    return jax.jit(lambda ubm, feats: _align_and_stats(
+        cfg, ubm, feats, cfg.update_sigma))
+
+
+@functools.lru_cache(maxsize=64)
+def make_em_fn(cfg: IVectorConfig):
+    """(model, stats) -> (new_model, diagnostics); one full EM iteration."""
+
+    def em_iter(model: TV.TVModel, n, f, S_tot):
+        if model.formulation == "standard":
+            st = ST.center(ST.BWStats(n, f, S_tot), model.means)
+            n_, f_, S_ = st.n, st.f, st.S
+        else:
+            n_, f_, S_ = n, f, S_tot
+        pre = TV.precompute(model)
+        acc = TV.em_accumulate(model, pre, n_, f_)
+        model = TV.m_step(model, acc, S_ if cfg.update_sigma else None,
+                          cfg.update_sigma)
+        if cfg.min_divergence:
+            model = TV.min_divergence(model, acc)
+        return model, {"mean_phi_norm": jnp.linalg.norm(acc.h / acc.n_utts)}
+
+    return jax.jit(em_iter)
+
+
+def train(cfg: IVectorConfig, ubm: U.FullGMM, feats,
+          n_iters: Optional[int] = None, key=None,
+          callback=None) -> TrainState:
+    """Full training loop on in-memory features [U, F, D]."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    model = TV.init_model(key, ubm.means, ubm.covs, cfg.ivector_dim,
+                          cfg.formulation, cfg.prior_offset)
+    state = TrainState(model=model, ubm=ubm)
+    stats_fn = make_stats_fn(cfg)
+    em_fn = make_em_fn(cfg)
+    n_iters = n_iters or cfg.n_iters
+
+    st = stats_fn(state.ubm, feats)
+    for it in range(n_iters):
+        realign = (cfg.realign_interval > 0 and it > 0
+                   and it % cfg.realign_interval == 0
+                   and state.model.formulation == "augmented")
+        if realign:
+            new_means = TV.updated_ubm_means(state.model)
+            state.ubm = U.FullGMM(state.ubm.weights, new_means,
+                                  state.ubm.covs)
+            st = stats_fn(state.ubm, feats)
+        state.model, diag = em_fn(state.model, st.n, st.f, st.S)
+        state.iteration = it + 1
+        if callback is not None:
+            callback(state, diag)
+    return state
+
+
+def extract(cfg: IVectorConfig, state: TrainState, feats) -> jax.Array:
+    """i-vectors for [U, F, D] features using the trained model + UBM."""
+    stats_fn = make_stats_fn(cfg)
+    st = stats_fn(state.ubm, feats)
+    model = state.model
+    if model.formulation == "standard":
+        stc = ST.center(ST.BWStats(st.n, st.f, None), model.means)
+        n_, f_ = stc.n, stc.f
+    else:
+        n_, f_ = st.n, st.f
+    pre = TV.precompute(model)
+    return TV.extract_ivectors(model, pre, n_, f_)

@@ -1,0 +1,225 @@
+"""Total-variability model: standard and augmented (Kaldi) formulations.
+
+Implements the paper's §2-§3 exactly:
+  * E-step posteriors, eqs. (3)-(4), with prior offset p (augmented only)
+  * M-step: T update, residual-covariance (Σ_c) update
+  * minimum-divergence re-estimation: whitening P1; for the augmented
+    formulation also the Householder reflection P2 (eqs. 8-11) and the
+    prior-offset update (eq. 12)
+  * UBM-mean write-back for realignment (§3.2 step 5)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stats import BWStats
+
+f32 = jnp.float32
+COV_FLOOR = 1e-4
+
+
+@dataclass
+class TVModel:
+    T: jax.Array            # [C, D, R]; augmented: column 0 holds m_c / p
+    Sigma: jax.Array        # [C, D, D] residual covariances
+    prior: jax.Array        # [R]; zeros (standard) or [p,0,...,0]-ish (augm.)
+    means: jax.Array        # [C, D] bias terms m_c (standard formulation)
+    formulation: str        # 'standard' | 'augmented'
+
+    @property
+    def rank(self):
+        return self.T.shape[2]
+
+
+jax.tree_util.register_pytree_node(
+    TVModel,
+    lambda m: ((m.T, m.Sigma, m.prior, m.means), m.formulation),
+    lambda form, c: TVModel(*c, formulation=form))
+
+
+def init_model(key, ubm_means, ubm_covs, R: int, formulation: str,
+               prior_offset: float = 100.0) -> TVModel:
+    """Paper §2.1/§2.2 initialisation."""
+    C, D = ubm_means.shape
+    T = jax.random.normal(key, (C, D, R), f32)
+    if formulation == "augmented":
+        T = T.at[:, :, 0].set(ubm_means / prior_offset)
+        prior = jnp.zeros((R,), f32).at[0].set(prior_offset)
+    else:
+        prior = jnp.zeros((R,), f32)
+    return TVModel(T=T, Sigma=ubm_covs.astype(f32), prior=prior,
+                   means=ubm_means.astype(f32), formulation=formulation)
+
+
+# ---------------------------------------------------------------------------
+# Precomputation + E-step (eqs. 3-4)
+# ---------------------------------------------------------------------------
+
+
+class Precomp(NamedTuple):
+    U: jax.Array    # [C, R, R]  T^T Σ^{-1} T
+    Pj: jax.Array   # [C, D, R]  Σ^{-1} T
+
+
+def precompute(model: TVModel) -> Precomp:
+    SigInv = jnp.linalg.inv(model.Sigma)
+    Pj = jnp.einsum("cde,cer->cdr", SigInv, model.T)
+    Uc = jnp.einsum("cdr,cds->crs", model.T, Pj)
+    return Precomp(Uc.astype(f32), Pj.astype(f32))
+
+
+def posterior(model: TVModel, pre: Precomp, n, f
+              ) -> Tuple[jax.Array, jax.Array]:
+    """n: [U, C], f: [U, C, D] -> (phi [U, R], Phi [U, R, R]).
+
+    Stats must be centred for the standard formulation and raw for the
+    augmented one (paper §2 convention).
+    """
+    R = model.rank
+    L = jnp.eye(R, dtype=f32) + jnp.einsum("uc,crs->urs", n, pre.U)
+    rhs = model.prior[None] + jnp.einsum("cdr,ucd->ur", pre.Pj, f)
+    chol = jnp.linalg.cholesky(L)
+    Phi = jax.scipy.linalg.cho_solve(
+        (chol, True), jnp.broadcast_to(jnp.eye(R, dtype=f32),
+                                       (n.shape[0], R, R)))
+    phi = jax.scipy.linalg.cho_solve((chol, True), rhs[..., None])[..., 0]
+    return phi.astype(f32), Phi.astype(f32)
+
+
+class EMAccum(NamedTuple):
+    A: jax.Array        # [C, R, R]  Σ_u n_uc (Phi_u + phi phi^T)
+    B: jax.Array        # [C, D, R]  Σ_u f_uc ⊗ phi_u
+    h: jax.Array        # [R]        Σ_u phi_u
+    H: jax.Array        # [R, R]     Σ_u (Phi_u + phi phi^T)
+    n_tot: jax.Array    # [C]
+    n_utts: jax.Array   # []
+
+
+def em_accumulate(model: TVModel, pre: Precomp, n, f) -> EMAccum:
+    """One minibatch of utterance stats -> E-step accumulators."""
+    phi, Phi = posterior(model, pre, n, f)
+    PP = Phi + phi[:, :, None] * phi[:, None, :]
+    A = jnp.einsum("uc,urs->crs", n, PP)
+    B = jnp.einsum("ucd,ur->cdr", f, phi)
+    return EMAccum(A=A, B=B, h=jnp.sum(phi, axis=0), H=jnp.sum(PP, axis=0),
+                   n_tot=jnp.sum(n, axis=0),
+                   n_utts=jnp.asarray(n.shape[0], f32))
+
+
+def merge_accums(a: EMAccum, b: EMAccum) -> EMAccum:
+    return EMAccum(*(x + y for x, y in zip(a, b)))
+
+
+def em_accumulate_scan(model: TVModel, pre: Precomp, n, f,
+                       chunk: int = 512) -> EMAccum:
+    """Chunked E-step: scans utterance sub-batches so the per-utterance
+    posterior covariances ([chunk, R, R], not [U, R, R]) never exist all at
+    once — at pod-scale batches the unchunked form is terabytes."""
+    U_, C = n.shape
+    chunk = min(chunk, U_)
+    if U_ % chunk != 0:
+        return em_accumulate(model, pre, n, f)
+    g = U_ // chunk
+    R, D = model.rank, model.T.shape[1]
+
+    def body(carry, inp):
+        nc, fc = inp
+        acc = em_accumulate(model, pre, nc, fc)
+        return merge_accums(carry, acc), None
+
+    zero = EMAccum(A=jnp.zeros((C, R, R), f32), B=jnp.zeros((C, D, R), f32),
+                   h=jnp.zeros((R,), f32), H=jnp.zeros((R, R), f32),
+                   n_tot=jnp.zeros((C,), f32), n_utts=jnp.zeros((), f32))
+    nr = n.reshape(g, chunk, C)
+    fr = f.reshape(g, chunk, C, D)
+    acc, _ = jax.lax.scan(body, zero, (nr, fr))
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# M-step
+# ---------------------------------------------------------------------------
+
+
+def m_step(model: TVModel, acc: EMAccum, S_tot: Optional[jax.Array],
+           update_sigma: bool) -> TVModel:
+    """T update (and Σ update) from accumulated statistics [Kenny 2005]."""
+    R = model.rank
+    # T_c = B_c A_c^{-1}; solve A_c^T X^T = B_c^T  (A symmetric)
+    A_reg = acc.A + 1e-6 * jnp.eye(R, dtype=f32)[None]
+    T_new = jnp.linalg.solve(A_reg, acc.B.transpose(0, 2, 1)) \
+        .transpose(0, 2, 1)
+    Sigma = model.Sigma
+    if update_sigma and S_tot is not None:
+        n_safe = jnp.maximum(acc.n_tot, 1e-6)[:, None, None]
+        TB = jnp.einsum("cdr,cer->cde", T_new, acc.B)
+        Sigma = (S_tot - 0.5 * (TB + TB.transpose(0, 2, 1))) / n_safe
+        D = Sigma.shape[1]
+        Sigma = 0.5 * (Sigma + Sigma.transpose(0, 2, 1)) \
+            + COV_FLOOR * jnp.eye(D)[None]
+    return replace(model, T=T_new.astype(f32), Sigma=Sigma.astype(f32))
+
+
+# ---------------------------------------------------------------------------
+# Minimum-divergence re-estimation (§3.1)
+# ---------------------------------------------------------------------------
+
+
+def min_divergence(model: TVModel, acc: EMAccum,
+                   update_means: bool = False) -> TVModel:
+    nu = jnp.maximum(acc.n_utts, 1.0)
+    h = acc.h / nu
+    G = acc.H / nu - h[:, None] * h[None, :]
+    R = model.rank
+    G = G + 1e-8 * jnp.eye(R, dtype=f32)
+    lam, Q = jnp.linalg.eigh(G)
+    lam = jnp.maximum(lam, 1e-10)
+    P1 = (Q * (lam ** -0.5)[None, :]).T            # Λ^{-1/2} Q^T
+    P1_inv = Q * (lam ** 0.5)[None, :]             # Q Λ^{1/2}
+
+    if model.formulation == "standard":
+        T_new = jnp.einsum("cdr,rs->cds", model.T, P1_inv)
+        means = model.means
+        if update_means:
+            # paper §5: m_c^upd = m_c + T_c h  (old T)
+            means = means + jnp.einsum("cdr,r->cd", model.T, h)
+        return replace(model, T=T_new.astype(f32), means=means)
+
+    # augmented: additionally require P2 P1 h = b e1 (Householder, eqs 8-11)
+    p1h = P1 @ h
+    norm = jnp.linalg.norm(p1h)
+    h_t = p1h / jnp.maximum(norm, 1e-10)
+    e1 = jnp.zeros((R,), f32).at[0].set(1.0)
+    denom = jnp.maximum(2.0 * (1.0 - h_t[0]), 1e-10)
+    alpha = denom ** -0.5
+    a = alpha * h_t - alpha * e1
+    # degenerate case: h already along e1 -> P2 = I
+    degenerate = (1.0 - h_t[0]) < 1e-8
+    P2 = jnp.where(degenerate, jnp.eye(R, dtype=f32),
+                   jnp.eye(R, dtype=f32) - 2.0 * a[:, None] * a[None, :])
+    # T <- T P1^{-1} P2^{-1}; P2 is a reflection: P2^{-1} = P2
+    T_new = jnp.einsum("cdr,rs,st->cdt", model.T, P1_inv, P2)
+    prior = jnp.where(degenerate, P1 @ h, P2 @ (P1 @ h))
+    return replace(model, T=T_new.astype(f32), prior=prior.astype(f32))
+
+
+# ---------------------------------------------------------------------------
+# Realignment support (§3.2 step 5) and i-vector extraction
+# ---------------------------------------------------------------------------
+
+
+def updated_ubm_means(model: TVModel) -> jax.Array:
+    """New UBM means: augmented = first column of T times p; standard = m_c."""
+    if model.formulation == "augmented":
+        return model.T[:, :, 0] * model.prior[0]
+    return model.means
+
+
+def extract_ivectors(model: TVModel, pre: Precomp, n, f) -> jax.Array:
+    """Posterior means, centred at the prior offset (Kaldi convention)."""
+    phi, _ = posterior(model, pre, n, f)
+    return phi - model.prior[None]

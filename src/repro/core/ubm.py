@@ -1,0 +1,166 @@
+"""Universal background models: diagonal- and full-covariance GMMs with EM.
+
+The full-covariance log-likelihood is evaluated densely as an MXU matmul via
+the quadratic-form vec-trick (see DESIGN.md §2):
+
+    loglik[f, c] = const_c + x_f . lin_c - 0.5 * vec(x_f x_f^T) . vec(P_c)
+
+with P_c the precision matrix — [F, D^2] @ [D^2, C] instead of gathered
+per-component quadratic forms. ``repro.kernels.gmm_loglik`` provides the
+fused Pallas kernel (expansion built in VMEM); this module's jnp path is the
+oracle and the CPU execution path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+_LOG2PI = 1.8378770664093453
+
+
+@dataclass
+class DiagGMM:
+    weights: jax.Array  # [C]
+    means: jax.Array    # [C, D]
+    vars: jax.Array     # [C, D]
+
+    @property
+    def n_components(self):
+        return self.weights.shape[0]
+
+
+@dataclass
+class FullGMM:
+    weights: jax.Array  # [C]
+    means: jax.Array    # [C, D]
+    covs: jax.Array     # [C, D, D]
+
+    @property
+    def n_components(self):
+        return self.weights.shape[0]
+
+    def to_diag(self) -> DiagGMM:
+        d = jnp.diagonal(self.covs, axis1=1, axis2=2)
+        return DiagGMM(self.weights, self.means, d)
+
+
+# ---------------------------------------------------------------------------
+# Log-likelihoods
+# ---------------------------------------------------------------------------
+
+
+def diag_loglik(gmm: DiagGMM, x) -> jax.Array:
+    """x: [F, D] -> [F, C] per-component log-likelihood (+ log weight)."""
+    inv = 1.0 / gmm.vars
+    const = (-0.5 * (jnp.sum(jnp.log(gmm.vars), axis=1)
+                     + gmm.means.shape[1] * _LOG2PI
+                     + jnp.sum(gmm.means ** 2 * inv, axis=1))
+             + jnp.log(gmm.weights))
+    lin = (gmm.means * inv).T          # [D, C]
+    quad = (-0.5 * inv).T              # [D, C]
+    return (const[None]
+            + x @ lin
+            + (x * x) @ quad).astype(f32)
+
+
+def full_precisions(gmm: FullGMM) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(const [C], lin [C, D], P [C, D, D]) for the vec-trick evaluation."""
+    chol = jnp.linalg.cholesky(gmm.covs)
+    P = jnp.linalg.inv(gmm.covs)
+    logdet = 2.0 * jnp.sum(
+        jnp.log(jnp.diagonal(chol, axis1=1, axis2=2)), axis=1)
+    lin = jnp.einsum("cij,cj->ci", P, gmm.means)
+    const = (-0.5 * (logdet + gmm.means.shape[1] * _LOG2PI
+                     + jnp.einsum("ci,ci->c", gmm.means, lin))
+             + jnp.log(gmm.weights))
+    return const.astype(f32), lin.astype(f32), P.astype(f32)
+
+
+def full_loglik(gmm: FullGMM, x, precomp=None) -> jax.Array:
+    """x: [F, D] -> [F, C] via the dense vec-trick matmul (routed through
+    the kernel wrapper: Pallas on TPU, jnp reference elsewhere)."""
+    from repro.kernels import ops
+    const, lin, P = precomp if precomp is not None else full_precisions(gmm)
+    D = x.shape[1]
+    return ops.gmm_loglik(x, const, lin.T, P.reshape(-1, D * D))
+
+
+# ---------------------------------------------------------------------------
+# EM training
+# ---------------------------------------------------------------------------
+
+VAR_FLOOR = 1e-3
+
+
+def init_diag_from_data(x, C: int, key) -> DiagGMM:
+    """Random-frame means, global variance init."""
+    F = x.shape[0]
+    idx = jax.random.choice(key, F, (C,), replace=False)
+    gvar = jnp.var(x, axis=0) + VAR_FLOOR
+    return DiagGMM(jnp.full((C,), 1.0 / C, f32), x[idx].astype(f32),
+                   jnp.broadcast_to(gvar, (C, x.shape[1])).astype(f32))
+
+
+def diag_em_step(gmm: DiagGMM, x) -> Tuple[DiagGMM, jax.Array]:
+    ll = diag_loglik(gmm, x)
+    logpost = ll - jax.scipy.special.logsumexp(ll, axis=1, keepdims=True)
+    post = jnp.exp(logpost)                      # [F, C]
+    n = jnp.sum(post, axis=0)                    # [C]
+    fsum = post.T @ x                            # [C, D]
+    ssum = post.T @ (x * x)                      # [C, D]
+    n_safe = jnp.maximum(n, 1e-6)
+    means = fsum / n_safe[:, None]
+    vars_ = jnp.maximum(ssum / n_safe[:, None] - means ** 2, VAR_FLOOR)
+    weights = jnp.maximum(n / jnp.sum(n), 1e-8)
+    avg_ll = jnp.mean(jax.scipy.special.logsumexp(ll, axis=1))
+    return DiagGMM(weights, means, vars_), avg_ll
+
+
+def full_from_diag(gmm: DiagGMM) -> FullGMM:
+    covs = jax.vmap(jnp.diag)(gmm.vars)
+    return FullGMM(gmm.weights, gmm.means, covs)
+
+
+def full_em_step(gmm: FullGMM, x) -> Tuple[FullGMM, jax.Array]:
+    ll = full_loglik(gmm, x)
+    logpost = ll - jax.scipy.special.logsumexp(ll, axis=1, keepdims=True)
+    post = jnp.exp(logpost)
+    F, D = x.shape
+    n = jnp.sum(post, axis=0)
+    fsum = post.T @ x
+    x2 = (x[:, :, None] * x[:, None, :]).reshape(F, D * D)
+    ssum = (post.T @ x2).reshape(-1, D, D)
+    n_safe = jnp.maximum(n, 1e-6)
+    means = fsum / n_safe[:, None]
+    covs = (ssum / n_safe[:, None, None]
+            - means[:, :, None] * means[:, None, :])
+    covs = covs + VAR_FLOOR * jnp.eye(D)[None]
+    weights = jnp.maximum(n / jnp.sum(n), 1e-8)
+    avg_ll = jnp.mean(jax.scipy.special.logsumexp(ll, axis=1))
+    return FullGMM(weights, means, covs), avg_ll
+
+
+def train_ubm(x, C: int, key, diag_iters: int = 8,
+              full_iters: int = 4) -> FullGMM:
+    """The Kaldi-style recipe: diag EM, then full-covariance EM."""
+    gmm = init_diag_from_data(x, C, key)
+    step_d = jax.jit(diag_em_step)
+    for _ in range(diag_iters):
+        gmm, _ = step_d(gmm, x)
+    full = full_from_diag(gmm)
+    step_f = jax.jit(full_em_step)
+    for _ in range(full_iters):
+        full, _ = step_f(full, x)
+    return full
+
+
+jax.tree_util.register_pytree_node(
+    DiagGMM, lambda g: ((g.weights, g.means, g.vars), None),
+    lambda _, c: DiagGMM(*c))
+jax.tree_util.register_pytree_node(
+    FullGMM, lambda g: ((g.weights, g.means, g.covs), None),
+    lambda _, c: FullGMM(*c))

@@ -1,0 +1,74 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``use_pallas(True/False)`` toggles between kernels (TPU; interpret mode on
+CPU for validation) and the pure-jnp references. The i-vector core calls
+these wrappers, so the kernel path is a drop-in.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bw_stats as _bw
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gmm_loglik as _gl
+from repro.kernels import ref
+from repro.kernels import tvm_estep as _te
+
+_USE_PALLAS = contextvars.ContextVar("repro_use_pallas", default=False)
+_INTERPRET = contextvars.ContextVar("repro_pallas_interpret", default=True)
+
+
+@contextlib.contextmanager
+def use_pallas(enable: bool = True, interpret: bool = True):
+    t1 = _USE_PALLAS.set(enable)
+    t2 = _INTERPRET.set(interpret)
+    try:
+        yield
+    finally:
+        _USE_PALLAS.reset(t1)
+        _INTERPRET.reset(t2)
+
+
+def gmm_loglik(x, const, lin, P_flat, **kw):
+    if _USE_PALLAS.get():
+        return _gl.gmm_loglik(x, const, lin, P_flat,
+                              interpret=_INTERPRET.get(), **kw)
+    return ref.gmm_loglik(x, const, lin, P_flat)
+
+
+def bw_stats(gamma, x, **kw):
+    if _USE_PALLAS.get():
+        return _bw.bw_stats(gamma, x, interpret=_INTERPRET.get(), **kw)
+    return ref.bw_stats(gamma, x)
+
+
+def packed_symmetric_accumulate(n, U_packed, **kw):
+    if _USE_PALLAS.get():
+        return _te.packed_symmetric_accumulate(
+            n, U_packed, interpret=_INTERPRET.get(), **kw)
+    return ref.packed_symmetric_accumulate(n, U_packed)
+
+
+def flash_attention(q, k, v, **kw):
+    if _USE_PALLAS.get():
+        return _fa.flash_attention(q, k, v, interpret=_INTERPRET.get(), **kw)
+    return ref.flash_attention(q, k, v)
+
+
+pack_symmetric = ref.pack_symmetric
+unpack_symmetric = ref.unpack_symmetric
+
+
+def selective_scan(dt, dx, A, Bc, Cc, **kw):
+    from repro.kernels import selective_scan as _ss
+    from repro.models.mamba import _ssm_scan
+    if _USE_PALLAS.get():
+        return _ss.selective_scan(dt, dx, A, Bc, Cc,
+                                  interpret=_INTERPRET.get(), **kw)
+    h0 = jnp.zeros((dt.shape[0], dt.shape[2], A.shape[1]), jnp.float32)
+    y, _ = _ssm_scan(dt, dx, A, Bc, Cc, h0)
+    return y

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference and
+the CPU execution path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def gmm_loglik(x, const, lin, P_flat):
+    """Full-covariance GMM log-likelihood via the vec-trick.
+
+    x: [F, D]; const: [C]; lin: [D, C]; P_flat: [C, D*D] (row-major
+    precision matrices). Returns [F, C]:
+        out[f,c] = const[c] + x_f . lin[:,c] - 0.5 vec(x x^T) . P_flat[c]
+    """
+    F, D = x.shape
+    x2 = (x[:, :, None] * x[:, None, :]).reshape(F, D * D)
+    return (const[None]
+            + jnp.dot(x, lin, preferred_element_type=f32)
+            - 0.5 * jnp.dot(x2, P_flat.T, preferred_element_type=f32)
+            ).astype(f32)
+
+
+def bw_stats(gamma, x):
+    """Dense Baum-Welch moments.
+
+    gamma: [F, C] posteriors; x: [F, D]. Returns (n [C], f [C, D],
+    S [C, D*D]) with S_c = sum_f gamma_fc vec(x_f x_f^T).
+    """
+    F, D = x.shape
+    x2 = (x[:, :, None] * x[:, None, :]).reshape(F, D * D)
+    n = jnp.sum(gamma, axis=0)
+    f = jnp.dot(gamma.T, x, preferred_element_type=f32)
+    S = jnp.dot(gamma.T, x2, preferred_element_type=f32)
+    return n.astype(f32), f.astype(f32), S.astype(f32)
+
+
+def packed_symmetric_accumulate(n, U_packed):
+    """TVM E-step precision accumulation with symmetric packing.
+
+    n: [U, C] occupancies; U_packed: [C, P] where P = R(R+1)/2 holds the
+    upper triangle of T_c^T Sigma_c^{-1} T_c. Returns [U, P] — the packed
+    L_u (before adding I). Packing halves both HBM bytes and matmul FLOPs
+    versus the dense [C, R, R] form.
+    """
+    return jnp.dot(n, U_packed, preferred_element_type=f32).astype(f32)
+
+
+def pack_symmetric(M):
+    """[..., R, R] -> [..., R(R+1)/2] upper triangle (row-major)."""
+    R = M.shape[-1]
+    iu = jnp.triu_indices(R)
+    return M[..., iu[0], iu[1]]
+
+
+def unpack_symmetric(Mp, R):
+    """[..., R(R+1)/2] -> [..., R, R] symmetric."""
+    iu = jnp.triu_indices(R)
+    out = jnp.zeros(Mp.shape[:-1] + (R, R), Mp.dtype)
+    out = out.at[..., iu[0], iu[1]].set(Mp)
+    outT = jnp.swapaxes(out, -1, -2)
+    diag = out * jnp.eye(R, dtype=Mp.dtype)
+    return out + outT - diag
+
+
+def flash_attention(q, k, v, causal: bool = True):
+    """Reference attention. q: [B, S, H, hd]; k, v: [B, S, KVH, hd]."""
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qr = q.reshape(B, S, KVH, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qr.astype(f32), k.astype(f32)) \
+        * hd ** -0.5
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskh->bqkgh", p, v.astype(f32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)

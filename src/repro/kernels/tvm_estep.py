@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: packed-symmetric TVM E-step precision accumulation.
+
+L_u = I + Σ_c n_uc U_c with U_c symmetric [R, R]. Storing and contracting
+only the packed upper triangle (P = R(R+1)/2) halves HBM bytes AND MXU
+FLOPs for the dominant E-step contraction (for R=400: 80200 vs 160000
+columns). Grid: (U/BU, P/BP, C/BC), C is the accumulated reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+f32 = jnp.float32
+
+
+def _kernel(n_ref, u_ref, out_ref):
+    ci = pl.program_id(2)
+    part = jax.lax.dot(n_ref[...].astype(f32), u_ref[...].astype(f32),
+                       preferred_element_type=f32)
+
+    @pl.when(ci == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(ci != 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_u", "block_p", "block_c",
+                                             "interpret"))
+def packed_symmetric_accumulate(n, U_packed, *, block_u: int = 128,
+                                block_p: int = 512, block_c: int = 128,
+                                interpret: bool = True):
+    """n: [U, C]; U_packed: [C, P] -> [U, P] (Σ_c n_uc U_packed[c])."""
+    U, C = n.shape
+    P = U_packed.shape[1]
+    bu = min(block_u, U)
+    bp = min(block_p, P)
+    bc = min(block_c, C)
+    assert U % bu == 0 and C % bc == 0
+    while P % bp != 0:
+        bp //= 2
+    grid = (U // bu, P // bp, C // bc)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bu, bc), lambda i, j, c: (i, c)),
+            pl.BlockSpec((bc, bp), lambda i, j, c: (c, j)),
+        ],
+        out_specs=pl.BlockSpec((bu, bp), lambda i, j, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((U, P), f32),
+        interpret=interpret,
+    )(n, U_packed)

@@ -1,0 +1,258 @@
+"""Dry-run cell for the paper's own model (ivector-tvm): lowers one
+distributed EM macro-step (alignment -> Baum-Welch -> E-step accumulation)
+on the production mesh.
+
+Sharding: utterances over the data axes, UBM components + T_c blocks over
+'model'. The cross-component reductions in eqs. (3)-(4) become psums over
+'model'; per-utterance accumulators psum over data. All expressed via
+GSPMD sharding constraints (tags) like the LM stack.
+
+Shapes (full config): C=2048, D=72, R=400, 512 utts x 1024 frames per
+macro-step — the paper's VoxCeleb setup.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline import roofline_from_compiled
+from repro.configs import get_shape
+from repro.configs.ivector_tvm import CONFIG as IV_CONFIG
+from repro.core import alignment as AL
+from repro.core import stats as ST
+from repro.core import tvm as TV
+from repro.core import ubm as U
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import make_rules, tag, use_rules
+
+f32 = jnp.float32
+
+
+def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
+                        second_order: bool):
+    """Alignment + Baum-Welch stats with components sharded over 'model',
+    all collectives explicit (shard_map):
+
+      1. each model rank scores its C-block (diag preselect + dense
+         full-cov loglik — the vec-trick matmul, frames replicated over
+         'model'),
+      2. two-stage top-K: local top-K per rank, all-gather only the
+         [*, K] candidates (not the [*, C] scores), global top-K,
+      3. selected full-cov loglik assembled with a masked pmax (each
+         component is owned by exactly one rank),
+      4. floor + renormalise (replicated, tiny),
+      5. stats accumulated owner-locally: a rank scatters only the
+         posterior entries whose component it owns — zero stats comms.
+
+    Replaces: AG of [F, C] scores at top_k (68.7 GB/step) + AG at the
+    stats scatter (21.7 GB/step) with an AG of [F, P*K] candidates
+    (~1.5 GB/step). See EXPERIMENTS.md §Perf (ivector iters).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    K = cfg.posterior_top_k
+    C, D = cfg.n_components, cfg.feat_dim
+    Pm = mesh.shape["model"]
+    C_loc = C // Pm
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    d_lin = (diag_gmm.means / diag_gmm.vars).T.astype(jnp.float32)   # [D, C]
+    d_quad = (-0.5 / diag_gmm.vars).T.astype(jnp.float32)            # [D, C]
+    d_const = (-0.5 * (jnp.sum(jnp.log(diag_gmm.vars), axis=1)
+                       + D * 1.8378770664093453
+                       + jnp.sum(diag_gmm.means ** 2 / diag_gmm.vars, axis=1))
+               + jnp.log(diag_gmm.weights)).astype(jnp.float32)
+    f_const, f_lin, f_P = full_pre
+    f_P = f_P.reshape(C, D * D)
+
+    def block(feats_b, dc, dl, dq, fc, fl, fp):
+        r = jax.lax.axis_index("model")
+        Ub, F_, _ = feats_b.shape
+        x = feats_b.reshape(-1, D)                     # [f_loc, D]
+        # local diag scores + local top-K
+        dll = dc[None] + x @ dl + (x * x) @ dq         # [f_loc, C_loc]
+        lv, li = jax.lax.top_k(dll, K)
+        gi = li + r * C_loc
+        # exchange candidates only
+        lv_all = jax.lax.all_gather(lv, "model", axis=1, tiled=True)
+        gi_all = jax.lax.all_gather(gi, "model", axis=1, tiled=True)
+        sv, sp = jax.lax.top_k(lv_all, K)
+        sel = jnp.take_along_axis(gi_all, sp, axis=1)  # [f_loc, K] global ids
+        # full-cov loglik for the local block (x (x) x built locally)
+        x2 = (x[:, :, None] * x[:, None, :]).reshape(-1, D * D)
+        fll = fc[None] + x @ fl.T + (-0.5) * (x2 @ fp.T)  # [f_loc, C_loc]
+        own = (sel // C_loc) == r
+        loc = jnp.where(own, sel % C_loc, 0)
+        vals = jnp.take_along_axis(fll, loc, axis=1)
+        vals = jnp.where(own, vals, -jnp.inf)
+        sel_ll = jax.lax.pmax(vals, "model")           # [f_loc, K] replicated
+        sel_ll = sel_ll - jax.scipy.special.logsumexp(sel_ll, axis=1,
+                                                      keepdims=True)
+        post = jnp.exp(sel_ll)
+        post = jnp.where(post < cfg.posterior_floor, 0.0, post)
+        post = post / jnp.maximum(jnp.sum(post, axis=1, keepdims=True),
+                                  1e-10)
+        # owner-local stats: scatter only owned entries
+        pv = jnp.where(own, post, 0.0)                 # [f_loc, K]
+        rows = loc.reshape(-1)
+        utt_of = jnp.repeat(jnp.arange(Ub), F_ * K)
+        n_b = jnp.zeros((Ub, C_loc), jnp.float32).at[
+            utt_of, jnp.broadcast_to(loc.reshape(Ub, -1),
+                                     (Ub, F_ * K)).reshape(-1)].add(
+            pv.reshape(-1))
+        xw = (pv[:, :, None] * x[:, None, :]).reshape(-1, D)
+        f_b = jnp.zeros((Ub, C_loc, D), jnp.float32).at[
+            utt_of, jnp.broadcast_to(loc.reshape(Ub, -1),
+                                     (Ub, F_ * K)).reshape(-1)].add(xw)
+        S_b = None
+        if second_order:
+            x2w = (pv[:, :, None] * x2[:, None, :]).reshape(-1, D * D)
+            S_b = jnp.zeros((C_loc, D * D), jnp.float32).at[rows].add(x2w)
+            S_b = jax.lax.psum(S_b, data_axes).reshape(C_loc, D, D)
+        else:
+            S_b = jnp.zeros((C_loc, D, D), jnp.float32)
+        return n_b, f_b, S_b
+
+    dp = P(data_axes, None, None)
+    cshard = P("model")
+    fn = jax.shard_map(
+        block, mesh=mesh,
+        in_specs=(dp, cshard, P(None, "model"), P(None, "model"),
+                  cshard, P("model", None), P("model", None)),
+        out_specs=(P(data_axes, "model"), P(data_axes, "model", None),
+                   P("model", None, None)),
+        check_vma=False)
+    return fn(feats_c, d_const, d_lin, d_quad, f_const, f_lin, f_P)
+
+
+def em_macro_step(cfg, mesh, ubm_w, ubm_means, ubm_covs, T, Sigma, prior,
+                  feats, utt_chunk: int = 512):
+    """One jittable EM macro-step over a global batch of utterances.
+
+    Scans utterance chunks through the FULL pipeline (alignment -> stats ->
+    E-step accumulate): nothing frame-resident ([F, C] posteriors,
+    [F, D^2] expansions, [U, R, R] posterior covariances) ever exists for
+    more than one chunk — the XLA analogue of the paper's fixed-size-batch
+    streaming (Fig. 1), and what the Pallas kernels fuse on real TPU.
+    Alignment + stats run inside an explicit shard_map (components over
+    'model'); the E-step contraction is GSPMD-tagged.
+    """
+    ubm = U.FullGMM(ubm_w, ubm_means, ubm_covs)
+    model = TV.TVModel(T=T, Sigma=Sigma, prior=prior, means=ubm_means,
+                       formulation="augmented")
+    feats = tag(feats, "utts", None, None)
+    diag = ubm.to_diag()
+    pre_ubm = U.full_precisions(ubm)
+    pre = TV.precompute(model)
+    pre = TV.Precomp(tag(pre.U, "components", None, None),
+                     tag(pre.Pj, "components", None, None))
+    C, D, R = cfg.n_components, cfg.feat_dim, cfg.ivector_dim
+    Utt = feats.shape[0]
+    g = Utt // utt_chunk
+    f32_ = jnp.float32
+
+    def chunk_body(carry, feats_c):
+        acc, S_tot = carry
+        n, f, S_b = sharded_align_stats(cfg, mesh, diag, pre_ubm, feats_c,
+                                        cfg.update_sigma)
+        n = tag(n, "utts", "components")
+        f = tag(f, "utts", "components", None)
+        acc_c = TV.em_accumulate(model, pre, n, f)
+        acc = TV.merge_accums(acc, acc_c)
+        S_tot = S_tot + tag(S_b, "components", None, None)
+        return (acc, S_tot), None
+
+    zero = TV.EMAccum(
+        A=jnp.zeros((C, R, R), f32_), B=jnp.zeros((C, D, R), f32_),
+        h=jnp.zeros((R,), f32_), H=jnp.zeros((R, R), f32_),
+        n_tot=jnp.zeros((C,), f32_), n_utts=jnp.zeros((), f32_))
+    S0 = jnp.zeros((C, D, D), f32_)
+    feats_g = feats.reshape((g, utt_chunk) + feats.shape[1:])
+    (acc, S), _ = jax.lax.scan(chunk_body, (zero, S0), feats_g)
+    acc = TV.EMAccum(tag(acc.A, "components", None, None),
+                     tag(acc.B, "components", None, None),
+                     acc.h, acc.H, acc.n_tot, acc.n_utts)
+    return acc, tag(S, "components", None, None)
+
+
+def input_structs(cfg, shape):
+    """ShapeDtypeStructs for (ubm..., model..., feats)."""
+    C, D, R = cfg.n_components, cfg.feat_dim, cfg.ivector_dim
+    U_ = shape.global_batch if shape is not None else cfg.utts_per_batch
+    F = cfg.frames_per_utt
+    sd = jax.ShapeDtypeStruct
+    return dict(
+        ubm_w=sd((C,), f32), ubm_means=sd((C, D), f32),
+        ubm_covs=sd((C, D, D), f32),
+        T=sd((C, D, R), f32), Sigma=sd((C, D, D), f32), prior=sd((R,), f32),
+        feats=sd((U_, F, D), f32),
+    )
+
+
+def input_axes():
+    return dict(
+        ubm_w=("components",), ubm_means=("components", None),
+        ubm_covs=("components", None, None),
+        T=("components", None, None), Sigma=("components", None, None),
+        prior=(None,),
+        feats=("utts", None, None),
+    )
+
+
+class _IvecShape:
+    """Adapter: the paper model has ONE training shape (its macro-step)."""
+    name = "em_step"
+    kind = "train"
+    seq_len = IV_CONFIG.frames_per_utt
+    global_batch = IV_CONFIG.utts_per_batch
+
+
+def model_flops(cfg, n_utts: int) -> float:
+    """Analytic useful FLOPs for one macro-step (per DESIGN.md):
+    alignment vec-trick matmul + BW stats + E-step solves/accumulations."""
+    C, D, R, K = (cfg.n_components, cfg.feat_dim, cfg.ivector_dim,
+                  cfg.posterior_top_k)
+    F = n_utts * cfg.frames_per_utt
+    align = 2.0 * F * (D * D + 2 * D) * C          # dense loglik matmuls
+    stats = 2.0 * F * K * (D * D + D)              # sparse accumulation
+    estep_L = 2.0 * n_utts * C * R * R             # n @ U contraction
+    estep_rhs = 2.0 * n_utts * C * D * R
+    solves = n_utts * (R ** 3) / 3.0 * 2
+    accum = 2.0 * n_utts * C * (R * R + D * R)
+    return align + stats + estep_L + estep_rhs + solves + accum
+
+
+def lower_cell(shape_name: str, multi_pod: bool):
+    cfg = IV_CONFIG
+    if shape_name != "train_4k":
+        # the paper model has a single macro-step shape; other assigned LM
+        # shapes do not apply (extra arch, not one of the 40 cells)
+        return None, {"arch": "ivector-tvm", "shape": shape_name,
+                      "mesh": "multi" if multi_pod else "single",
+                      "status": "skipped",
+                      "reason": "ivector-tvm defines one EM macro-step "
+                                "shape; reported under train_4k only"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, cfg, None)
+    structs = input_structs(cfg, None)
+    axes = input_axes()
+    with use_rules(rules):
+        shardings = {k: rules.sharding(structs[k].shape, axes[k])
+                     for k in structs}
+        fn = lambda ubm_w, ubm_means, ubm_covs, T, Sigma, prior, feats: \
+            em_macro_step(cfg, mesh, ubm_w, ubm_means, ubm_covs, T, Sigma,
+                          prior, feats)
+        jitted = jax.jit(fn, in_shardings=tuple(
+            shardings[k] for k in ("ubm_w", "ubm_means", "ubm_covs", "T",
+                                   "Sigma", "prior", "feats")))
+        lowered = jitted.lower(*(structs[k] for k in
+                                 ("ubm_w", "ubm_means", "ubm_covs", "T",
+                                  "Sigma", "prior", "feats")))
+        compiled = lowered.compile()
+    rep = roofline_from_compiled(
+        compiled, arch="ivector-tvm", shape=shape_name,
+        mesh_desc="2x16x16" if multi_pod else "16x16", chips=mesh.size,
+        model_flops=model_flops(cfg, cfg.utts_per_batch))
+    row = rep.row()
+    row["status"] = "ok"
+    row["fallbacks"] = sorted(set(str(x) for x in rules.fallbacks))
+    return compiled, row

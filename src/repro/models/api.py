@@ -1,0 +1,264 @@
+"""Unified model API: param tables, init, train/prefill/decode steps and
+``input_specs`` (ShapeDtypeStruct stand-ins, no allocation) for every arch.
+
+This is the surface the launcher, dry-run and tests use; arch families are
+dispatched here.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import jamba as J
+from repro.models import layers as L
+from repro.models import rwkv as R
+from repro.models import transformer as T
+from repro.models import vlm as V
+from repro.models import whisper as W
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.sharding import tag
+
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Param tables / init / specs
+# ---------------------------------------------------------------------------
+
+
+def param_table(cfg: ModelConfig, max_seq: int = 0) -> L.ParamTable:
+    if cfg.family == "audio":
+        return W.whisper_table(cfg, max_seq=max_seq or 4096)
+    if cfg.family == "vlm":
+        return V.vlm_table(cfg)
+    if cfg.family == "ssm":
+        return R.rwkv_table(cfg)
+    if cfg.family == "hybrid":
+        return J.jamba_table(cfg)
+    return T.decoder_table(cfg)
+
+
+def init_params(cfg: ModelConfig, key, max_seq: int = 0) -> Dict:
+    return L.table_init(param_table(cfg, max_seq), key, L.param_dtype(cfg))
+
+
+def params_struct(cfg: ModelConfig, max_seq: int = 0) -> Dict:
+    return L.table_struct(param_table(cfg, max_seq), L.param_dtype(cfg))
+
+
+def params_axes(cfg: ModelConfig, max_seq: int = 0) -> Dict:
+    return L.table_axes(param_table(cfg, max_seq))
+
+
+def n_params(cfg: ModelConfig, max_seq: int = 0) -> int:
+    t = param_table(cfg, max_seq)
+    tot = 0
+    for shape, _, _ in t.values():
+        n = 1
+        for s in shape:
+            n *= s
+        tot += n
+    return tot
+
+
+def n_active_params(cfg: ModelConfig, max_seq: int = 0) -> int:
+    """Per-token active params (MoE: only top_k of n_experts count)."""
+    t = param_table(cfg, max_seq)
+    tot = 0
+    for name, (shape, _, _) in t.items():
+        n = 1
+        for s in shape:
+            n *= s
+        if ("/moe/w_" in name or name.startswith(("layer/moe/w_",))) and \
+                cfg.moe is not None:
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        tot += n
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# Input specs (per brief: ShapeDtypeStruct stand-ins for every model input)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Batch pytree for the step selected by ``shape.kind``."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    adt = L.cfg_dtype(cfg)
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct(
+                        (B, cfg.encoder.n_frames, cfg.encoder.frontend_dim), adt),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "vlm":
+            n_p = cfg.encoder.n_frames
+            return {"patches": jax.ShapeDtypeStruct(
+                        (B, n_p, cfg.encoder.frontend_dim), adt),
+                    "tokens": jax.ShapeDtypeStruct((B, S - n_p), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S - n_p), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "audio":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder.n_frames, cfg.encoder.frontend_dim), adt)
+        if cfg.family == "vlm":
+            n_p = cfg.encoder.n_frames
+            spec["tokens"] = jax.ShapeDtypeStruct((B, S - n_p), i32)
+            spec["patches"] = jax.ShapeDtypeStruct(
+                (B, n_p, cfg.encoder.frontend_dim), adt)
+        return spec
+    # decode: one new token against a seq_len-sized cache
+    return {"token": jax.ShapeDtypeStruct((B,), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def input_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    specs = input_specs(cfg, shape)
+    ax = {}
+    for k, v in specs.items():
+        if k == "pos":
+            ax[k] = ()
+        elif v.ndim == 3:
+            ax[k] = ("batch", None, None)
+        elif v.ndim == 2:
+            ax[k] = ("batch", None)
+        else:
+            ax[k] = ("batch",)
+    return ax
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Dict, Dict]:
+    """(struct, logical_axes) for the decode cache at this shape."""
+    dt = L.cfg_dtype(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        return R.cache_struct(cfg, B, dt)
+    if cfg.family == "hybrid":
+        return J.cache_struct(cfg, B, S, dt)
+    cross = cfg.encoder.n_frames if cfg.family == "audio" else 0
+    return T.cache_struct(cfg, B, S, dt, cross_frames=cross)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def _hidden_and_aux(cfg, params, batch, kind: str):
+    if cfg.family == "audio":
+        if kind == "train":
+            h, aux = W.forward_train(cfg, params, batch["frames"], batch["tokens"])
+            return h, aux, None
+        return W.forward_prefill(cfg, params, batch["frames"], batch["tokens"])
+    if cfg.family == "vlm":
+        if kind == "train":
+            h, aux = V.forward_train(cfg, params, batch["patches"], batch["tokens"])
+            return h, aux, None
+        return V.forward_prefill(cfg, params, batch["patches"], batch["tokens"])
+    if cfg.family == "ssm":
+        return R.forward(cfg, params, batch["tokens"], kind)
+    if cfg.family == "hybrid":
+        return J.forward(cfg, params, batch["tokens"], kind)
+    x = L.embed(cfg, params, batch["tokens"])
+    return T.forward(cfg, params, x, kind)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    h, aux, _ = _hidden_and_aux(cfg, params, batch, "train")
+    loss = L.chunked_lm_loss(cfg, params, h, batch["labels"])
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_loss * aux
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, oc: Optional[AdamWConfig] = None):
+    oc = oc or AdamWConfig(moment_dtype=cfg.opt_state_dtype)
+    g = max(1, cfg.grad_accum)
+
+    def train_step(state, batch):
+        grad_fn = jax.value_and_grad(lambda p, b: loss_fn(cfg, p, b))
+        if g == 1:
+            loss, grads = grad_fn(state["params"], batch)
+        else:
+            # gradient accumulation: g microbatches, grads averaged in the
+            # optimizer-state dtype (sharded like params)
+            micro = jax.tree.map(
+                lambda a: a.reshape((g, a.shape[0] // g) + a.shape[1:]),
+                batch)
+            adt = jnp.dtype(cfg.opt_state_dtype)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt),
+                                 state["params"])
+
+            def mb(carry, mbatch):
+                acc, lacc = carry
+                l_, gr = grad_fn(state["params"], mbatch)
+                acc = jax.tree.map(
+                    lambda a, x: a + (x / g).astype(a.dtype), acc, gr)
+                return (acc, lacc + l_ / g), None
+
+            (grads, loss), _ = jax.lax.scan(
+                mb, (zeros, jnp.zeros((), f32)), micro)
+        params, opt, metrics = adamw_update(state["params"], grads,
+                                            state["opt"], oc)
+        metrics["loss"] = loss
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        h, _, cache = _hidden_and_aux(cfg, params, batch, "prefill")
+        logits = L.logits_fn(cfg, params, h[:, -1:])
+        return cache, logits[:, 0]
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, batch):
+        token, pos = batch["token"], batch["pos"]
+        if cfg.family == "audio":
+            h, _, cache = W.forward_decode(cfg, params, token, cache, pos)
+        elif cfg.family == "vlm":
+            h, _, cache = V.forward_decode(cfg, params, token, cache, pos)
+        elif cfg.family == "ssm":
+            h, _, cache = R.forward(cfg, params, token, "decode", cache=cache)
+        elif cfg.family == "hybrid":
+            h, _, cache = J.forward(cfg, params, token, "decode",
+                                    cache=cache, pos=pos)
+        else:
+            x = L.embed(cfg, params, token[:, None])
+            h, _, cache = T.forward(cfg, params, x, "decode",
+                                    cache=cache, pos=pos)
+        logits = L.logits_fn(cfg, params, h)
+        return cache, logits[:, 0]
+    return decode_step
+
+
+def init_state(cfg: ModelConfig, key, max_seq: int = 0,
+               oc: Optional[AdamWConfig] = None) -> Dict:
+    params = init_params(cfg, key, max_seq)
+    oc = oc or AdamWConfig(moment_dtype=cfg.opt_state_dtype)
+    return {"params": params, "opt": adamw_init(params, oc)}
+
+
+def state_struct(cfg: ModelConfig, max_seq: int = 0) -> Dict:
+    ps = params_struct(cfg, max_seq)
+    mdt = jnp.dtype(cfg.opt_state_dtype)
+    mom = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt), ps)
+    return {"params": ps,
+            "opt": {"m": mom, "v": mom,
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def state_axes(cfg: ModelConfig, max_seq: int = 0) -> Dict:
+    pa = params_axes(cfg, max_seq)
+    return {"params": pa,
+            "opt": {"m": pa, "v": pa, "count": ()}}

@@ -1,0 +1,189 @@
+"""Jamba: Mamba + attention 1:7 interleave with every-other-layer MoE.
+
+Layer i: attention iff i % attn_period == 0, else Mamba; the FFN of layer i
+is MoE iff i is odd. Layers are grouped into periods of ``attn_period``;
+params are stacked per period-slot and scanned over periods (slot bodies are
+unrolled — ``attn_period`` distinct bodies in the HLO).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import mamba
+from repro.models.moe import moe_ffn, moe_table
+from repro.sharding import tag
+
+f32 = jnp.float32
+
+
+def _slot_is_attn(cfg, s: int) -> bool:
+    return s % cfg.attn_period == 0
+
+
+def _slot_is_moe(cfg, s: int) -> bool:
+    # global layer index = period * attn_period + s; parity == parity of s
+    return cfg.moe is not None and s % 2 == 1
+
+
+def n_periods(cfg) -> int:
+    assert cfg.n_layers % cfg.attn_period == 0
+    return cfg.n_layers // cfg.attn_period
+
+
+def jamba_table(cfg) -> L.ParamTable:
+    np_ = n_periods(cfg)
+    t: L.ParamTable = {}
+    t.update(L.embed_table(cfg))
+    t.update(L.norm_table(cfg, "ln_final"))
+    for s in range(cfg.attn_period):
+        pre = f"period/s{s}"
+        t.update(L.norm_table(cfg, pre + "/ln_mix", np_))
+        t.update(L.norm_table(cfg, pre + "/ln_ffn", np_))
+        if _slot_is_attn(cfg, s):
+            t.update(L.attn_table(cfg, pre + "/attn", np_))
+        else:
+            t.update(mamba.mamba_table(cfg, pre + "/mamba", np_))
+        if _slot_is_moe(cfg, s):
+            t.update(moe_table(cfg, pre + "/moe", np_))
+        else:
+            t.update(L.mlp_table(cfg, pre + "/mlp", np_))
+    return t
+
+
+def _sub(p: Dict, prefix: str) -> Dict:
+    n = len(prefix)
+    return {k[n:]: v for k, v in p.items() if k.startswith(prefix)}
+
+
+def forward(cfg, params, tokens, kind: str, cache=None, pos=None):
+    """kind='train'|'prefill': tokens [B,T]; 'decode': tokens [B].
+
+    cache (decode): {'k','v': [np,B,S,KVH,hd], 'conv': [np,7,B,dc-1,di],
+                     'h': [np,7,B,di,ds]} — slot-axis packs the mamba slots.
+    """
+    period_p = {k[len("period/"):]: v for k, v in params.items()
+                if k.startswith("period/")}
+    other = {k: v for k, v in params.items() if not k.startswith("period/")}
+    dtype = L.cfg_dtype(cfg)
+    P = cfg.attn_period
+    n_mamba = P - 1
+
+    decode = kind == "decode"
+    if decode:
+        x = other["embed"].astype(dtype)[tokens][:, None]  # [B,1,d]
+    else:
+        x = other["embed"].astype(dtype)[tokens]
+        x = tag(x, "batch", "seq", None)
+    positions = jnp.arange(x.shape[1]) if not decode else None
+
+    def slot_body(s, h, sp, slot_cache):
+        hn = L.norm(cfg, sp, "ln_mix", h)
+        new_cache = {}
+        if _slot_is_attn(cfg, s):
+            ap = _sub(sp, "attn/")
+            if decode:
+                q = jnp.einsum("bsd,dhe->bshe", hn, ap["wq"],
+                               preferred_element_type=f32).astype(dtype)
+                k = jnp.einsum("bsd,dhe->bshe", hn, ap["wk"],
+                               preferred_element_type=f32).astype(dtype)
+                v = jnp.einsum("bsd,dhe->bshe", hn, ap["wv"],
+                               preferred_element_type=f32).astype(dtype)
+                pvec = jnp.full((1,), pos, jnp.int32)
+                q = L.rope(q, pvec, cfg.rope_theta)
+                k = L.rope(k, pvec, cfg.rope_theta)
+                kc = lax.dynamic_update_slice_in_dim(
+                    slot_cache["k"], k.astype(slot_cache["k"].dtype), pos, axis=1)
+                vc = lax.dynamic_update_slice_in_dim(
+                    slot_cache["v"], v.astype(slot_cache["v"].dtype), pos, axis=1)
+                kc = tag(kc, "cache_batch", "cache_seq", "kv_heads", None)
+                vc = tag(vc, "cache_batch", "cache_seq", "kv_heads", None)
+                o = L.decode_attention(q[:, 0], kc, vc, pos)[:, None]
+                new_cache = {"k": kc, "v": vc}
+            else:
+                q, k, v = L.qkv_proj(cfg, ap, hn, positions)
+                o = L.blockwise_causal_attention(
+                    q, k, v, q_block=min(cfg.attn_chunk, 512),
+                    kv_block=cfg.attn_chunk)
+            mix = L.out_proj(ap, o)
+        else:
+            mp = _sub(sp, "mamba/")
+            state = ((slot_cache["conv"], slot_cache["h"])
+                     if slot_cache else None)
+            mix, (conv2, h2) = mamba.mamba_mix(cfg, mp, hn, state)
+            if decode:
+                new_cache = {"conv": conv2.astype(slot_cache["conv"].dtype),
+                             "h": h2.astype(slot_cache["h"].dtype)}
+        h = h + mix.astype(dtype)
+        hn = L.norm(cfg, sp, "ln_ffn", h)
+        aux = jnp.zeros((), f32)
+        if _slot_is_moe(cfg, s):
+            y, aux = moe_ffn(cfg, _sub(sp, "moe/"), hn, kind)
+        else:
+            y = L.mlp(cfg, _sub(sp, "mlp/"), hn)
+        h = h + y.astype(dtype)
+        return tag(h, "batch", "seq", None), aux, new_cache
+
+    def period_body(carry, xs):
+        h, aux = carry
+        new_caches = {}
+        mi = 0
+        for s in range(P):
+            sp = _sub(xs["p"], f"s{s}/")
+            if _slot_is_attn(cfg, s):
+                sc = ({"k": xs["k"], "v": xs["v"]} if decode else None)
+            else:
+                sc = ({"conv": xs["conv"][mi], "h": xs["h"][mi]}
+                      if decode else None)
+            slot_fn = (jax.checkpoint(lambda h_, sp_, sc_, s_=s:
+                                      slot_body(s_, h_, sp_, sc_))
+                       if cfg.remat == "layer" else
+                       (lambda h_, sp_, sc_, s_=s: slot_body(s_, h_, sp_, sc_)))
+            h, aux_s, nc = slot_fn(h, sp, sc)
+            aux = aux + aux_s
+            if decode:
+                if _slot_is_attn(cfg, s):
+                    new_caches.update(nc)
+                else:
+                    new_caches.setdefault("conv", []).append(nc["conv"])
+                    new_caches.setdefault("h", []).append(nc["h"])
+                    mi += 1
+        ys = {}
+        if decode:
+            ys = {"k": new_caches["k"], "v": new_caches["v"],
+                  "conv": jnp.stack(new_caches["conv"]),
+                  "h": jnp.stack(new_caches["h"])}
+        return (h, aux), ys
+
+    body = jax.checkpoint(period_body) if cfg.remat == "layer" else period_body
+    xs = {"p": period_p}
+    if decode:
+        xs.update({k: cache[k] for k in ("k", "v", "conv", "h")})
+    (x, aux), ys = lax.scan(body, (x, jnp.zeros((), f32)), xs)
+    x = L.norm(cfg, other, "ln_final", x)
+    new_cache = ys if decode else None
+    return x, aux, new_cache
+
+
+def cache_struct(cfg, batch: int, seq: int, dtype):
+    np_ = n_periods(cfg)
+    KVH, hd = cfg.n_kv_heads, cfg.resolved_head_dim()
+    di, dtr, ds, dc = mamba.dims(cfg)
+    nm = cfg.attn_period - 1
+    struct = {
+        "k": jax.ShapeDtypeStruct((np_, batch, seq, KVH, hd), dtype),
+        "v": jax.ShapeDtypeStruct((np_, batch, seq, KVH, hd), dtype),
+        "conv": jax.ShapeDtypeStruct((np_, nm, batch, dc - 1, di), dtype),
+        "h": jax.ShapeDtypeStruct((np_, nm, batch, di, ds), dtype),
+    }
+    axes = {
+        "k": ("layers", "cache_batch", "cache_seq", "kv_heads", None),
+        "v": ("layers", "cache_batch", "cache_seq", "kv_heads", None),
+        "conv": ("layers", None, "cache_batch", None, "ffn"),
+        "h": ("layers", None, "cache_batch", "ffn", None),
+    }
+    return struct, axes

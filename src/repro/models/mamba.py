@@ -1,0 +1,139 @@
+"""Mamba-1 selective SSM layer (jamba's sequence mixer).
+
+Selective scan implemented as chunked ``lax.scan`` with an inner
+``lax.associative_scan`` over each chunk — parallel within chunks,
+O(T) overall, O(1)-state decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+f32 = jnp.float32
+SSM_CHUNK = 64
+
+
+def dims(cfg):
+    di = cfg.ssm.expand * cfg.d_model
+    dtr = cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+    return di, dtr, cfg.ssm.d_state, cfg.ssm.d_conv
+
+
+def mamba_table(cfg, prefix, lead) -> L.ParamTable:
+    d = cfg.d_model
+    di, dtr, ds, dc = dims(cfg)
+    s = 0.02
+    la = ("layers",) if lead else ()
+    le = (lead,) if lead else ()
+    t = {
+        prefix + "/in_proj": (le + (d, 2 * di), la + ("fsdp", "ffn"), ("normal", s)),
+        prefix + "/conv_w": (le + (di, dc), la + ("ffn", None), ("normal", s)),
+        prefix + "/conv_b": (le + (di,), la + ("ffn",), ("zeros",)),
+        prefix + "/x_proj": (le + (di, dtr + 2 * ds), la + ("ffn", None), ("normal", s)),
+        prefix + "/dt_w": (le + (dtr, di), la + (None, "ffn"), ("normal", s)),
+        prefix + "/dt_b": (le + (di,), la + ("ffn",), ("const", -4.6)),  # softplus->~0.01
+        prefix + "/A_log": (le + (di, ds), la + ("ffn", None), ("const", 0.0)),
+        prefix + "/D": (le + (di,), la + ("ffn",), ("ones",)),
+        prefix + "/out_proj": (le + (di, d), la + ("ffn", "fsdp"), ("normal", s)),
+    }
+    return t
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv via shifts. x: [B,T,di]; w: [di,dc]; tail:
+    [B, dc-1, di] carry for decode/streaming (None -> zero history)."""
+    B, T, di = x.shape
+    dc = w.shape[1]
+    if tail is None:
+        tail = jnp.zeros((B, dc - 1, di), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # [B, T+dc-1, di]
+    y = jnp.zeros((B, T, di), f32)
+    for i in range(dc):
+        y = y + xp[:, i:i + T].astype(f32) * w[:, i].astype(f32)
+    new_tail = xp[:, -(dc - 1):] if dc > 1 else tail
+    return (y + b.astype(f32)).astype(x.dtype), new_tail
+
+
+def _ssm_scan(dt, dx, A, Bc, Cc, h0, scan_dtype=f32):
+    """Selective scan h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t;
+    y_t = C_t . h_t, chunked.
+
+    dt, dx: [B,T,di]; A: [di,ds]; Bc, Cc: [B,T,ds]; h0: [B,di,ds].
+    Returns (y [B,T,di], h_last). The [.,.,di,ds] transition tensors are
+    built INSIDE the checkpointed chunk and the projection to y happens
+    there too, so nothing [T, di, ds]-sized is ever materialized or saved.
+    """
+    B, T, di = dt.shape
+    ds = A.shape[1]
+    c = min(SSM_CHUNK, T)
+    if T % c != 0:
+        c = T
+    n = T // c
+
+    def combine(lhs, rhs):
+        al, bl = lhs
+        ar, br = rhs
+        return al * ar, bl * ar + br
+
+    def chunk(h, inp):
+        dtc, dxc, bcc, ccc = inp  # [B,c,di], [B,c,di], [B,c,ds], [B,c,ds]
+        ac = jnp.exp(dtc[..., None] * A[None, None]).astype(scan_dtype)
+        bxc = (dxc[..., None] * bcc[:, :, None, :]).astype(scan_dtype)
+        aa, bb = lax.associative_scan(combine, (ac, bxc), axis=1)
+        h_all = aa.astype(f32) * h[:, None] + bb.astype(f32)
+        y = jnp.einsum("btds,bts->btd", h_all.astype(scan_dtype),
+                       ccc.astype(scan_dtype), preferred_element_type=f32)
+        return h_all[:, -1], y
+
+    resh = lambda z: z.reshape((B, n, c) + z.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, z.ndim + 1)))
+    body = jax.checkpoint(chunk)
+    h_last, ys = lax.scan(body, h0, (resh(dt), resh(dx), resh(Bc), resh(Cc)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, di)
+    return y, h_last
+
+
+def mamba_mix(cfg, p, x, state=None):
+    """x: [B,T,d]. state: None (train) or (conv_tail, h) for streaming.
+    Returns (y [B,T,d], new_state)."""
+    di, dtr, ds, dc = dims(cfg)
+    B, T, d = x.shape
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(x.dtype),
+                    preferred_element_type=f32).astype(x.dtype)
+    x1, z = xz[..., :di], xz[..., di:]
+    tail = state[0] if state is not None else None
+    x1, new_tail = _causal_conv(x1, p["conv_w"], p["conv_b"], tail)
+    x1 = jax.nn.silu(x1.astype(f32)).astype(x.dtype)
+    proj = jnp.einsum("btd,de->bte", x1, p["x_proj"].astype(x.dtype),
+                      preferred_element_type=f32)
+    dt_r, Bc, Cc = proj[..., :dtr], proj[..., dtr:dtr + ds], proj[..., dtr + ds:]
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_r, p["dt_w"].astype(f32),
+                   preferred_element_type=f32) + p["dt_b"].astype(f32))
+    A = -jnp.exp(p["A_log"].astype(f32))  # [di, ds]
+    h0 = (state[1].astype(f32) if state is not None
+          else jnp.zeros((B, di, ds), f32))
+    y, h_last = _ssm_scan(dt, dt * x1.astype(f32), A, Bc, Cc, h0,
+                          scan_dtype=jnp.dtype(cfg.ssm.scan_dtype))
+    y = y + p["D"].astype(f32) * x1.astype(f32)
+    y = y * jax.nn.silu(z.astype(f32))
+    out = jnp.einsum("btd,de->bte", y.astype(x.dtype),
+                     p["out_proj"].astype(x.dtype),
+                     preferred_element_type=f32).astype(x.dtype)
+    return out, (new_tail, h_last.astype(x.dtype))
+
+
+def state_struct(cfg, batch, dtype, lead):
+    di, dtr, ds, dc = dims(cfg)
+    le = (lead,) if lead else ()
+    la = ("layers",) if lead else ()
+    struct = {
+        "conv": jax.ShapeDtypeStruct(le + (batch, dc - 1, di), dtype),
+        "h": jax.ShapeDtypeStruct(le + (batch, di, ds), dtype),
+    }
+    axes = {"conv": la + ("cache_batch", None, "ffn"),
+            "h": la + ("cache_batch", "ffn", None)}
+    return struct, axes

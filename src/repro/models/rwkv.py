@@ -1,0 +1,287 @@
+"""RWKV-6 (Finch): attention-free token mixing with data-dependent decay.
+
+Faithful to arXiv:2404.05892: ddlerp token-shift (5-way LoRA), low-rank
+data-dependent decay w_t = exp(-exp(.)), per-head bonus u, group-norm +
+SiLU output gate, squared-ReLU channel mix.
+
+Sequence processing is chunked: within a chunk the WKV recurrence is
+evaluated in closed matmul form with per-channel decay factors whose
+exponents are <= 0 on the intra-chunk path (numerically safe); the carry
+state crosses chunks through a scan. Decode is a single recurrence step —
+O(1) per token, which is why this arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.sharding import tag
+
+f32 = jnp.float32
+
+# exponent-safety clamp for per-step log-decay (see module docstring)
+LOGW_MIN = -5.0
+LOGW_MAX = -1e-4
+WKV_CHUNK = 16
+
+
+def rwkv_table(cfg) -> L.ParamTable:
+    d, nl = cfg.d_model, cfg.n_layers
+    H = cfg.n_heads
+    K = cfg.rwkv.head_dim
+    dl, tl = cfg.rwkv.decay_lora, cfg.rwkv.tokenshift_lora
+    ff = cfg.d_ff
+    s = 0.02
+    Vp = L.padded_vocab(cfg.vocab_size)
+    t: L.ParamTable = {"embed": ((Vp, d), ("vocab", "dmodel"), ("normal", s)),
+                       "unembed": ((d, Vp), ("fsdp", "vocab"), ("normal", s))}
+    for pre in ("ln0", "ln_final"):
+        t[pre + "/scale"] = ((d,), ("dmodel",), ("zeros",))
+        t[pre + "/bias"] = ((d,), ("dmodel",), ("zeros",))
+    def lt(name, shape, axes, init=("normal", s)):
+        t["layer/" + name] = ((nl,) + shape, ("layers",) + axes, init)
+    for pre in ("ln1", "ln2"):
+        lt(pre + "/scale", (d,), ("dmodel",), ("zeros",))
+        lt(pre + "/bias", (d,), ("dmodel",), ("zeros",))
+    # time-mix
+    lt("mu_x", (d,), ("dmodel",), ("const", 0.5))
+    lt("mu", (5, d), (None, "dmodel"), ("const", 0.5))
+    lt("ts_w1", (d, 5 * tl), ("dmodel", None))
+    lt("ts_w2", (5, tl, d), (None, None, "dmodel"), ("zeros",))
+    lt("w_r", (d, H * K), ("fsdp", "heads"))
+    lt("w_k", (d, H * K), ("fsdp", "heads"))
+    lt("w_v", (d, H * K), ("fsdp", "heads"))
+    lt("w_g", (d, H * K), ("fsdp", "heads"))
+    lt("w_o", (H * K, d), ("heads", "fsdp"))
+    lt("w0", (H * K,), ("heads",), ("const", -1.0))  # -> logw ~ -exp(-1+tanh..)
+    lt("dw1", (d, dl), ("dmodel", None))
+    lt("dw2", (dl, H * K), (None, "heads"), ("zeros",))
+    lt("u", (H, K), ("heads", None), ("normal", s))
+    lt("gn/scale", (H * K,), ("heads",), ("zeros",))
+    lt("gn/bias", (H * K,), ("heads",), ("zeros",))
+    # channel-mix
+    lt("mu_k", (d,), ("dmodel",), ("const", 0.5))
+    lt("mu_r", (d,), ("dmodel",), ("const", 0.5))
+    lt("wk_c", (d, ff), ("fsdp", "ffn"))
+    lt("wv_c", (ff, d), ("ffn", "fsdp"))
+    lt("wr_c", (d, d), ("fsdp", "dmodel"))
+    return t
+
+
+def _shift(x, x_prev):
+    """x: [B,T,d]; x_prev: [B,d] carry (last token of previous segment)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, dx):
+    """RWKV6 data-dependent token-shift; returns the 5 mixed streams."""
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+    B, T, d = x.shape
+    k5 = jnp.tanh(jnp.einsum("btd,de->bte", xxx, p["ts_w1"].astype(x.dtype),
+                             preferred_element_type=f32))
+    tl = p["ts_w1"].shape[1] // 5
+    k5 = k5.reshape(B, T, 5, tl)
+    deltas = jnp.einsum("btfl,fld->btfd", k5, p["ts_w2"].astype(f32),
+                        preferred_element_type=f32)
+    mus = p["mu"].astype(f32) + deltas  # [B,T,5,d]
+    return [(x + dx * mus[:, :, j].astype(x.dtype)) for j in range(5)]
+
+
+def _wkv_chunk(r, k, v, logw, u, state):
+    """One chunk of the WKV recurrence in closed form.
+
+    r,k: [B,c,H,K]; v: [B,c,H,V]; logw: [B,c,H,K] (<=0); u: [H,K];
+    state: [B,H,K,V]. Returns (out [B,c,H,V], new_state).
+    """
+    cw = jnp.cumsum(logw, axis=1)            # inclusive
+    cwx = cw - logw                          # exclusive (decay up to t-1)
+    r_in = r * jnp.exp(cwx)
+    inter = jnp.einsum("bthk,bhkv->bthv", r_in, state,
+                       preferred_element_type=f32)
+    # intra-chunk: att[t,s] = sum_k r_t k_s exp(cwx_t - cw_s), s < t
+    k_dec = k * jnp.exp(-cw)
+    att = jnp.einsum("bthk,bshk->bhts", r_in, k_dec,
+                     preferred_element_type=f32)
+    c = r.shape[1]
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    att = jnp.where(mask[None, None], att, 0.0)
+    intra = jnp.einsum("bhts,bshv->bthv", att, v.astype(f32),
+                       preferred_element_type=f32)
+    # diagonal bonus
+    coeff = jnp.einsum("bthk,hk,bthk->bth", r.astype(f32), u.astype(f32),
+                       k.astype(f32))
+    diag = coeff[..., None] * v.astype(f32)
+    out = inter + intra + diag
+    # state update: S' = exp(cw_last) * S + sum_s k_s exp(cw_last - cw_s) v_s
+    cw_last = cw[:, -1]  # [B,H,K]
+    k_tail = k * jnp.exp(cw_last[:, None] - cw)
+    new_state = (jnp.exp(cw_last)[..., None] * state +
+                 jnp.einsum("bshk,bshv->bhkv", k_tail, v.astype(f32),
+                            preferred_element_type=f32))
+    return out, new_state
+
+
+def time_mix(cfg, p, x, tm_x, wkv_state):
+    """x: [B,T,d]. Returns (out [B,T,d], last_x [B,d], new_state)."""
+    B, T, d = x.shape
+    H, K = cfg.n_heads, cfg.rwkv.head_dim
+    dx = _shift(x, tm_x) - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, dx)
+    r = jnp.einsum("btd,dh->bth", xr, p["w_r"].astype(x.dtype),
+                   preferred_element_type=f32).reshape(B, T, H, K)
+    k = jnp.einsum("btd,dh->bth", xk, p["w_k"].astype(x.dtype),
+                   preferred_element_type=f32).reshape(B, T, H, K)
+    v = jnp.einsum("btd,dh->bth", xv, p["w_v"].astype(x.dtype),
+                   preferred_element_type=f32).reshape(B, T, H, K)
+    g = jnp.einsum("btd,dh->bth", xg, p["w_g"].astype(x.dtype),
+                   preferred_element_type=f32)
+    dlog = (p["w0"].astype(f32) +
+            jnp.einsum("btd,dl,lh->bth", jnp.tanh(xw.astype(f32)),
+                       p["dw1"].astype(f32), p["dw2"].astype(f32)))
+    logw = jnp.clip(-jnp.exp(dlog), LOGW_MIN, LOGW_MAX).reshape(B, T, H, K)
+    u = p["u"]
+
+    c = min(WKV_CHUNK, T)
+    if T % c != 0:
+        c = T
+    n = T // c
+    def chunk_step(state, inp):
+        rc, kc, vc, wc = inp
+        out, state = _wkv_chunk(rc, kc, vc, wc, u, state)
+        return state, out
+    resh = lambda a: a.reshape(B, n, c, H, K).transpose(1, 0, 2, 3, 4)
+    new_state, outs = lax.scan(
+        chunk_step, wkv_state.astype(f32),
+        (resh(r), resh(k), resh(v), resh(logw)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, K)
+
+    out = _gn_gate(cfg, p, out, g, B, T)
+    y = jnp.einsum("bth,hd->btd", out, p["w_o"].astype(out.dtype),
+                   preferred_element_type=f32).astype(x.dtype)
+    return y, x[:, -1], new_state
+
+
+def _gn_gate(cfg, p, out, g, B, T):
+    H, K = cfg.n_heads, cfg.rwkv.head_dim
+    mu = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = (out - mu) * lax.rsqrt(var + 1e-5)
+    out = out.reshape(B, T, H * K)
+    out = out * (1.0 + p["gn/scale"].astype(f32)) + p["gn/bias"].astype(f32)
+    return (out * jax.nn.silu(g)).astype(jnp.promote_types(out.dtype, f32))
+
+
+def time_mix_decode(cfg, p, x, tm_x, wkv_state):
+    """Single-token recurrence. x: [B,d]. Returns (out, x, new_state)."""
+    B, d = x.shape
+    H, K = cfg.n_heads, cfg.rwkv.head_dim
+    xt = x[:, None]
+    dx = (tm_x - x)[:, None]
+    xw, xk, xv, xr, xg = _ddlerp(p, xt, dx)
+    proj = lambda w, z: jnp.einsum("btd,dh->bth", z, w.astype(x.dtype),
+                                   preferred_element_type=f32)[:, 0]
+    r = proj(p["w_r"], xr).reshape(B, H, K)
+    k = proj(p["w_k"], xk).reshape(B, H, K)
+    v = proj(p["w_v"], xv).reshape(B, H, K)
+    g = proj(p["w_g"], xg)
+    dlog = (p["w0"].astype(f32) +
+            jnp.einsum("bd,dl,lh->bh", jnp.tanh(xw[:, 0].astype(f32)),
+                       p["dw1"].astype(f32), p["dw2"].astype(f32)))
+    w = jnp.exp(jnp.clip(-jnp.exp(dlog), LOGW_MIN, LOGW_MAX)).reshape(B, H, K)
+    S = wkv_state.astype(f32)
+    kv = k[..., None] * v[..., None, :]  # [B,H,K,V]
+    out = jnp.einsum("bhk,bhkv->bhv", r,
+                     S + p["u"].astype(f32)[None, :, :, None] * kv)
+    new_state = w[..., None] * S + kv
+    out = _gn_gate(cfg, p, out[:, None].transpose(0, 1, 2, 3), g[:, None], B, 1)
+    y = jnp.einsum("bth,hd->btd", out, p["w_o"].astype(out.dtype),
+                   preferred_element_type=f32)[:, 0]
+    return y.astype(x.dtype), x, new_state
+
+
+def channel_mix(cfg, p, x, cm_x):
+    dx = _shift(x, cm_x) - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(
+        jnp.einsum("btd,df->btf", xk, p["wk_c"].astype(x.dtype),
+                   preferred_element_type=f32)))
+    kv = jnp.einsum("btf,fd->btd", k.astype(x.dtype), p["wv_c"].astype(x.dtype),
+                    preferred_element_type=f32)
+    r = jax.nn.sigmoid(
+        jnp.einsum("btd,de->bte", xr, p["wr_c"].astype(x.dtype),
+                   preferred_element_type=f32))
+    return (r * kv).astype(x.dtype), x[:, -1]
+
+
+def forward(cfg, params, tokens_or_x, kind: str, cache=None, pos=None):
+    """kind='train'/'prefill': tokens [B,T] -> (hidden, aux=0, cache|None).
+    kind='decode': tokens [B] single step with recurrent cache."""
+    layer_p = {k[len("layer/"):]: v for k, v in params.items()
+               if k.startswith("layer/")}
+    other = {k: v for k, v in params.items() if not k.startswith("layer/")}
+    dtype = L.cfg_dtype(cfg)
+    H, K = cfg.n_heads, cfg.rwkv.head_dim
+    d = cfg.d_model
+
+    if kind == "decode":
+        x = other["embed"].astype(dtype)[tokens_or_x]  # [B, d]
+        x = L.layernorm(x, other["ln0/scale"], other["ln0/bias"])
+        B = x.shape[0]
+
+        def body(h, xs):
+            lp, tm_x, wkv, cm_x = xs["p"], xs["tm_x"], xs["wkv"], xs["cm_x"]
+            hn = L.layernorm(h, lp["ln1/scale"], lp["ln1/bias"])
+            out, tm_x2, wkv2 = time_mix_decode(cfg, lp, hn, tm_x, wkv)
+            h = h + out
+            hn = L.layernorm(h, lp["ln2/scale"], lp["ln2/bias"])
+            out, cm_x2 = channel_mix(cfg, lp, hn[:, None], cm_x)
+            h = h + out[:, 0]
+            return h, {"tm_x": tm_x2, "wkv": wkv2.astype(xs["wkv"].dtype),
+                       "cm_x": cm_x2}
+
+        xs = {"p": layer_p, "tm_x": cache["tm_x"], "wkv": cache["wkv"],
+              "cm_x": cache["cm_x"]}
+        x, new_cache = lax.scan(body, x, xs)
+        x = L.layernorm(x, other["ln_final/scale"], other["ln_final/bias"])
+        return x[:, None], jnp.zeros((), f32), new_cache
+
+    x = other["embed"].astype(dtype)[tokens_or_x]  # [B,T,d]
+    x = L.layernorm(x, other["ln0/scale"], other["ln0/bias"])
+    x = tag(x, "batch", "seq", None)
+    B, T = x.shape[:2]
+    z_tm = jnp.zeros((B, d), dtype)
+    z_wkv = jnp.zeros((B, H, K, K), f32)
+
+    def body(h, lp):
+        hn = L.layernorm(h, lp["ln1/scale"], lp["ln1/bias"])
+        out, tm_x, wkv = time_mix(cfg, lp, hn, z_tm, z_wkv)
+        h = h + out
+        hn = L.layernorm(h, lp["ln2/scale"], lp["ln2/bias"])
+        out, cm_x = channel_mix(cfg, lp, hn, jnp.zeros((B, d), h.dtype))
+        h = h + out
+        h = tag(h, "batch", "seq", None)
+        return h, {"tm_x": tm_x, "wkv": wkv.astype(dtype), "cm_x": cm_x}
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "layer" else body
+    x, states = lax.scan(body_fn, x, layer_p)
+    x = L.layernorm(x, other["ln_final/scale"], other["ln_final/bias"])
+    cache = states if kind == "prefill" else None
+    return x, jnp.zeros((), f32), cache
+
+
+def cache_struct(cfg, batch: int, dtype):
+    H, K, d, nl = cfg.n_heads, cfg.rwkv.head_dim, cfg.d_model, cfg.n_layers
+    struct = {
+        "tm_x": jax.ShapeDtypeStruct((nl, batch, d), dtype),
+        "wkv": jax.ShapeDtypeStruct((nl, batch, H, K, K), dtype),
+        "cm_x": jax.ShapeDtypeStruct((nl, batch, d), dtype),
+    }
+    axes = {
+        "tm_x": ("layers", "cache_batch", None),
+        "wkv": ("layers", "cache_batch", "heads", None, None),
+        "cm_x": ("layers", "cache_batch", None),
+    }
+    return struct, axes

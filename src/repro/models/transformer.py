@@ -1,0 +1,217 @@
+"""Decoder-only transformer (dense + MoE FFN) with layer-scan, KV cache,
+optional cross-attention (whisper decoder) — pure JAX, GSPMD-shardable.
+
+Param layout: flat dict; per-layer tensors are stacked on a leading [L] axis
+and consumed by ``lax.scan`` (small HLO, fast 512-device compiles). Keys
+under ``"layer/"`` are scanned; everything else is global.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.moe import moe_ffn, moe_table
+from repro.sharding import tag
+
+f32 = jnp.float32
+
+
+def is_moe_layer(cfg) -> bool:
+    return cfg.moe is not None and cfg.moe.layout == "all"
+
+
+def decoder_table(cfg, max_seq: int = 0, cross: bool = False) -> L.ParamTable:
+    nl = cfg.n_layers
+    t: L.ParamTable = {}
+    t.update(L.embed_table(cfg))
+    t.update(L.attn_table(cfg, "layer/attn", nl))
+    t.update(L.norm_table(cfg, "layer/ln_attn", nl))
+    t.update(L.norm_table(cfg, "ln_final"))
+    if cross:
+        t.update(L.attn_table(cfg, "layer/xattn", nl))
+        t.update(L.norm_table(cfg, "layer/ln_xattn", nl))
+    if is_moe_layer(cfg):
+        t.update(moe_table(cfg, "layer/moe", nl))
+        if cfg.moe.dense_residual_d_ff:
+            t.update(L.mlp_table(cfg, "layer/mlp", nl,
+                                 d_ff=cfg.moe.dense_residual_d_ff))
+    else:
+        t.update(L.mlp_table(cfg, "layer/mlp", nl))
+    t.update(L.norm_table(cfg, "layer/ln_mlp", nl))
+    if max_seq:  # learned positional embedding (whisper)
+        t["pos_embed"] = ((max_seq, cfg.d_model), (None, "dmodel"),
+                          ("normal", 0.02))
+    return t
+
+
+def split_params(params) -> Tuple[Dict, Dict]:
+    layer = {k[len("layer/"):]: v for k, v in params.items()
+             if k.startswith("layer/")}
+    other = {k: v for k, v in params.items() if not k.startswith("layer/")}
+    return layer, other
+
+
+def _sub(p, prefix):
+    n = len(prefix)
+    return {k[n:]: v for k, v in p.items() if k.startswith(prefix)}
+
+
+def _ffn(cfg, lp, x, kind, sp=False):
+    """FFN branch: dense MLP, MoE, or MoE + dense residual (arctic)."""
+    aux = jnp.zeros((), f32)
+    if is_moe_layer(cfg):
+        y, aux = moe_ffn(cfg, _sub(lp, "moe/"), x, kind, sp=sp)
+        if cfg.moe.dense_residual_d_ff:
+            y = y + L.mlp(cfg, _sub(lp, "mlp/"), tag(x, "batch", "seq", None))
+    else:
+        y = L.mlp(cfg, _sub(lp, "mlp/"), tag(x, "batch", "seq", None))
+    return y, aux
+
+
+def _use_rope(cfg) -> bool:
+    return cfg.family != "audio"
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg, params, x, kind: str, *, enc_out=None, cache=None,
+            pos=None, positions=None):
+    """Run the decoder stack.
+
+    kind='train'/'prefill': x [B, S, D] embedded inputs; returns
+        (hidden [B,S,D], aux, new_cache|None).
+    kind='decode': x [B, 1, D]; ``cache`` = {'k','v'(,'xk','xv')} stacked
+        [L, B, S, KVH, hd]; ``pos`` scalar int32 write position; returns
+        (hidden [B,1,D], aux, updated cache).
+    """
+    layer_p, other_p = split_params(params)
+    cross = any(k.startswith("xattn") for k in layer_p)
+    B = x.shape[0]
+    dtype = x.dtype
+    if positions is None:
+        positions = (jnp.arange(x.shape[1]) if kind != "decode"
+                     else jnp.array([0]))  # decode positions come from `pos`
+    if "pos_embed" in other_p:
+        if kind == "decode":
+            pe = lax.dynamic_slice_in_dim(other_p["pos_embed"], pos, 1, axis=0)
+        else:
+            pe = other_p["pos_embed"][: x.shape[1]]
+        x = x + pe.astype(dtype)[None]
+
+    use_rope = _use_rope(cfg)
+
+    def attn_block(lp, prefix, h, layer_cache):
+        """Self-attention; returns (out, new_kv or kv-for-cache)."""
+        ap = _sub(lp, prefix + "/")
+        if kind == "decode":
+            q = jnp.einsum("bsd,dhe->bshe", h, ap["wq"].astype(dtype))
+            k = jnp.einsum("bsd,dhe->bshe", h, ap["wk"].astype(dtype))
+            v = jnp.einsum("bsd,dhe->bshe", h, ap["wv"].astype(dtype))
+            if use_rope:
+                pvec = jnp.full((1,), pos, jnp.int32)
+                q = L.rope(q, pvec, cfg.rope_theta)
+                k = L.rope(k, pvec, cfg.rope_theta)
+            kc, vc = layer_cache
+            kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+            kc = tag(kc, "cache_batch", "cache_seq", "kv_heads", None)
+            vc = tag(vc, "cache_batch", "cache_seq", "kv_heads", None)
+            o = L.decode_attention(q[:, 0], kc, vc, pos)[:, None]
+            return L.out_proj(ap, o), (kc, vc)
+        else:
+            ring = L.use_ring_attention(cfg, h.shape[0], h.shape[1])
+            q, k, v = L.qkv_proj(cfg, ap, h,
+                                 positions if use_rope else None, sp=ring)
+            if ring:
+                o = L.ring_attention(q, k, v)
+            else:
+                o = L.blockwise_causal_attention(
+                    q, k, v, q_block=min(cfg.attn_chunk, 512),
+                    kv_block=cfg.attn_chunk)
+            return L.out_proj(ap, o), (k, v)
+
+    def cross_block(lp, h, layer_xcache):
+        ap = _sub(lp, "xattn/")
+        q = jnp.einsum("bsd,dhe->bshe", h, ap["wq"].astype(dtype))
+        if kind == "decode":
+            xk, xv = layer_xcache  # projected at prefill: [B, F, KVH, hd]
+        else:
+            xk = jnp.einsum("bfd,dhe->bfhe", enc_out, ap["wk"].astype(dtype))
+            xv = jnp.einsum("bfd,dhe->bfhe", enc_out, ap["wv"].astype(dtype))
+        o = L.full_attention(q, xk, xv, causal=False)
+        return L.out_proj(ap, o), (xk, xv)
+
+    def layer_fn(carry, xs):
+        h, aux = carry
+        lp = xs["p"]
+        # sequence-parallel residual stream: norms/adds run seq-sharded over
+        # 'model'; matmul inputs are re-tagged 'seq' (all-gather) and the
+        # projection outputs reduce-scatter back via the residual tag.
+        hn = L.norm(cfg, lp, "ln_attn", h)
+        if kind != "decode" and not L.use_ring_attention(
+                cfg, h.shape[0], h.shape[1]):
+            hn = tag(hn, "batch", "seq", None)
+        out, kv = attn_block(lp, "attn", hn, (xs.get("k"), xs.get("v")))
+        h = h + out.astype(dtype)
+        ys = {"k": kv[0], "v": kv[1]}
+        if cross:
+            hn = L.norm(cfg, lp, "ln_xattn", h)
+            if kind != "decode":
+                hn = tag(hn, "batch", "seq", None)
+            xout, xkv = cross_block(lp, hn, (xs.get("xk"), xs.get("xv")))
+            h = h + xout.astype(dtype)
+            ys.update({"xk": xkv[0], "xv": xkv[1]})
+        ffn_out, aux_l = _ffn(cfg, lp, L.norm(cfg, lp, "ln_mlp", h), kind,
+                              sp=True)
+        h = h + ffn_out.astype(dtype)
+        h = tag(h, "batch", "seq_sp", None)
+        return (h, aux + aux_l), ys
+
+    body = jax.checkpoint(layer_fn) if cfg.remat == "layer" else layer_fn
+
+    xs = {"p": layer_p}
+    if kind == "decode":
+        xs.update({"k": cache["k"], "v": cache["v"]})
+        if cross:
+            xs.update({"xk": cache["xk"], "xv": cache["xv"]})
+
+    if kind != "decode":
+        x = tag(x, "batch", "seq_sp", None)
+    (x, aux), ys = lax.scan(body, (x, jnp.zeros((), f32)), xs)
+    x = L.norm(cfg, other_p, "ln_final", x)
+    if kind != "decode":
+        x = tag(x, "batch", "seq", None)  # gather for the LM head / loss
+
+    new_cache = None
+    if kind == "decode":
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = ys["k"], ys["v"]
+    elif kind == "prefill":
+        new_cache = {"k": ys["k"].astype(dtype), "v": ys["v"].astype(dtype)}
+        if cross:
+            new_cache["xk"], new_cache["xv"] = ys["xk"], ys["xv"]
+    return x, aux, new_cache
+
+
+def cache_struct(cfg, batch: int, seq: int, dtype, cross_frames: int = 0):
+    """ShapeDtypeStruct pytree + logical axes for the decode KV cache."""
+    KVH, hd, nl = cfg.n_kv_heads, cfg.resolved_head_dim(), cfg.n_layers
+    axes = ("layers", "cache_batch", "cache_seq", "kv_heads", None)
+    struct = {
+        "k": jax.ShapeDtypeStruct((nl, batch, seq, KVH, hd), dtype),
+        "v": jax.ShapeDtypeStruct((nl, batch, seq, KVH, hd), dtype),
+    }
+    ax = {"k": axes, "v": axes}
+    if cross_frames:
+        xs = jax.ShapeDtypeStruct((nl, batch, cross_frames, KVH, hd), dtype)
+        struct["xk"] = struct["xv"] = xs
+        xaxes = ("layers", "cache_batch", "frames", "kv_heads", None)
+        ax["xk"] = ax["xv"] = xaxes
+    return struct, ax

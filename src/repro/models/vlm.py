@@ -1,0 +1,49 @@
+"""InternVL2-style VLM: stub ViT patch embeddings prepended to the text
+stream of a GQA decoder LM. Loss is computed on text positions only."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.sharding import tag
+
+f32 = jnp.float32
+
+
+def vlm_table(cfg) -> L.ParamTable:
+    t = T.decoder_table(cfg)
+    fd = cfg.encoder.frontend_dim
+    t["patch_proj"] = ((fd, cfg.d_model), (None, "dmodel"), ("normal", 0.02))
+    return t
+
+
+def _merge(cfg, params, patches, tokens):
+    dtype = L.cfg_dtype(cfg)
+    pe = jnp.einsum("bpf,fd->bpd", patches.astype(dtype),
+                    params["patch_proj"].astype(dtype),
+                    preferred_element_type=f32).astype(dtype)
+    te = L.embed(cfg, params, tokens)
+    x = jnp.concatenate([pe, te], axis=1)
+    return tag(x, "batch", "seq", None)
+
+
+def forward_train(cfg, params, patches, tokens):
+    """Returns hidden states for TEXT positions only [B, S_text, D]."""
+    x = _merge(cfg, params, patches, tokens)
+    h, aux, _ = T.forward(cfg, params, x, "train")
+    n_p = patches.shape[1]
+    return h[:, n_p:], aux
+
+
+def forward_prefill(cfg, params, patches, tokens):
+    x = _merge(cfg, params, patches, tokens)
+    h, aux, cache = T.forward(cfg, params, x, "prefill")
+    return h, aux, cache
+
+
+def forward_decode(cfg, params, token, cache, pos):
+    x = L.embed(cfg, params, token[:, None])
+    h, aux, cache = T.forward(cfg, params, x, "decode", cache=cache, pos=pos)
+    return h, aux, cache

@@ -1,0 +1,86 @@
+"""Whisper large-v3 backbone: transformer encoder + cross-attending decoder.
+
+The mel-spectrogram conv frontend is a STUB per the brief: the data pipeline
+(and ``input_specs``) supply post-conv frame embeddings [B, n_frames, d].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.sharding import tag
+
+f32 = jnp.float32
+
+
+def whisper_table(cfg, max_seq: int) -> L.ParamTable:
+    enc = cfg.encoder
+    t = T.decoder_table(cfg, max_seq=max_seq, cross=True)
+    ne = enc.n_layers
+    t.update(L.attn_table(cfg, "enc_layer/attn", ne))
+    t.update(L.norm_table(cfg, "enc_layer/ln_attn", ne))
+    t.update(L.mlp_table(cfg, "enc_layer/mlp", ne))
+    t.update(L.norm_table(cfg, "enc_layer/ln_mlp", ne))
+    t.update(L.norm_table(cfg, "enc_ln_final"))
+    t["enc_pos_embed"] = ((enc.n_frames, cfg.d_model), (None, "dmodel"),
+                          ("normal", 0.02))
+    return t
+
+
+def encode(cfg, params, frames):
+    """frames: [B, F, d] stub conv-frontend output -> [B, F, d]."""
+    enc_p = {k[len("enc_layer/"):]: v for k, v in params.items()
+             if k.startswith("enc_layer/")}
+    dtype = L.cfg_dtype(cfg)
+    x = frames.astype(dtype) + params["enc_pos_embed"].astype(dtype)[None]
+    x = tag(x, "batch", "frames", None)
+
+    def body(h, lp):
+        hn = L.norm(cfg, lp, "ln_attn", h)
+        q = jnp.einsum("bsd,dhe->bshe", hn, lp["attn/wq"],
+                       preferred_element_type=f32).astype(dtype)
+        k = jnp.einsum("bsd,dhe->bshe", hn, lp["attn/wk"],
+                       preferred_element_type=f32).astype(dtype)
+        v = jnp.einsum("bsd,dhe->bshe", hn, lp["attn/wv"],
+                       preferred_element_type=f32).astype(dtype)
+        o = L.full_attention(q, k, v, causal=False)
+        h = h + L.out_proj({"wo": lp["attn/wo"]}, o).astype(dtype)
+        h = h + L.mlp(cfg, {k2[len("mlp/"):]: v2 for k2, v2 in lp.items()
+                            if k2.startswith("mlp/")},
+                      L.norm(cfg, lp, "ln_mlp", h)).astype(dtype)
+        return tag(h, "batch", "frames", None), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "layer" else body
+    x, _ = lax.scan(body_fn, x, enc_p)
+    return L.layernorm(x, params["enc_ln_final/scale"],
+                       params["enc_ln_final/bias"])
+
+
+def _dec_params(params):
+    return {k: v for k, v in params.items()
+            if not k.startswith(("enc_layer/", "enc_pos_embed", "enc_ln_final"))}
+
+
+def forward_train(cfg, params, frames, tokens):
+    enc_out = encode(cfg, params, frames)
+    x = L.embed(cfg, params, tokens)
+    h, aux, _ = T.forward(cfg, _dec_params(params), x, "train", enc_out=enc_out)
+    return h, aux
+
+
+def forward_prefill(cfg, params, frames, tokens):
+    enc_out = encode(cfg, params, frames)
+    x = L.embed(cfg, params, tokens)
+    h, aux, cache = T.forward(cfg, _dec_params(params), x, "prefill",
+                              enc_out=enc_out)
+    return h, aux, cache
+
+
+def forward_decode(cfg, params, token, cache, pos):
+    x = L.embed(cfg, params, token[:, None])
+    h, aux, cache = T.forward(cfg, _dec_params(params), x, "decode",
+                              cache=cache, pos=pos)
+    return h, aux, cache

@@ -1,0 +1,75 @@
+"""AdamW with configurable moment dtypes (bf16 moments for 480B-scale),
+global-norm clipping and a linear-warmup/cosine schedule. Pure pytree ops —
+optimizer state sharding follows parameter sharding structurally."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params, oc: AdamWConfig):
+    dt = jnp.dtype(oc.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(f32))) for l in leaves))
+
+
+def _schedule(oc: AdamWConfig, step):
+    step = step.astype(f32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - oc.warmup_steps) /
+                    jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (0.1 + 0.9 * cos)
+
+
+def adamw_update(params, grads, opt_state, oc: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = _schedule(oc, count)
+    c1 = 1.0 - oc.b1 ** count.astype(f32)
+    c2 = 1.0 - oc.b2 ** count.astype(f32)
+
+    def upd(p, g, m, v):
+        g = g.astype(f32) * scale
+        m2 = oc.b1 * m.astype(f32) + (1 - oc.b1) * g
+        v2 = oc.b2 * v.astype(f32) + (1 - oc.b2) * jnp.square(g)
+        step_ = (m2 / c1) / (jnp.sqrt(v2 / c2) + oc.eps)
+        p2 = p.astype(f32) - lr * (step_ + oc.weight_decay * p.astype(f32))
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return (new_p, {"m": new_m, "v": new_v, "count": count},
+            {"grad_norm": gnorm, "lr": lr})

@@ -1,0 +1,159 @@
+"""Logical-axis sharding: named logical axes resolved to mesh axes via rules.
+
+Model code tags arrays with *logical* axis names ('batch', 'heads', 'ffn',
+'experts', 'vocab', ...). A ``Rules`` object (built per arch x shape x mesh by
+``make_rules``) maps logical names to physical mesh axes, with divisibility
+fallbacks (a logical axis whose dimension does not divide over its mesh axes is
+silently replicated — recorded in ``Rules.fallbacks`` for the dry-run report).
+
+When no rules are active (CPU smoke tests), all tagging is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass
+class Rules:
+    mesh: Mesh
+    table: Dict[str, AxisVal]
+    fallbacks: list = field(default_factory=list)
+
+    def axis_size(self, mesh_axes: AxisVal) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        n = 1
+        for a in mesh_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec(self, dims: int, axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for logical ``axes``; drops non-divisible entries."""
+        assert len(axes) == dims, (axes, dims)
+        entries = []
+        for i, name in enumerate(axes):
+            mesh_axes = self.table.get(name) if name else None
+            if mesh_axes is not None and shape is not None:
+                if shape[i] % self.axis_size(mesh_axes) != 0:
+                    self.fallbacks.append((name, tuple(shape), i))
+                    mesh_axes = None
+            entries.append(mesh_axes)
+        return P(*entries)
+
+    def sharding(self, shape: Sequence[int], axes: Sequence[Optional[str]]
+                 ) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(len(shape), axes, shape))
+
+
+_ACTIVE: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "repro_sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    tok = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def active_rules() -> Optional[Rules]:
+    return _ACTIVE.get()
+
+
+def tag(x, *axes: Optional[str]):
+    """Constrain ``x``'s sharding by logical axis names; no-op without rules."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    spec = rules.spec(x.ndim, axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def model_axis_size() -> int:
+    rules = _ACTIVE.get()
+    if rules is None:
+        return 1
+    return rules.axis_size(rules.table.get("_model_axis", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Rule construction (per arch x shape x mesh)
+# ---------------------------------------------------------------------------
+
+
+def make_rules(mesh: Mesh, cfg=None, shape=None) -> Rules:
+    """Default logical->physical mapping.
+
+    batch        -> all data-parallel axes ('pod' composes with 'data')
+    heads/ffn/
+    experts/vocab-> 'model' (tensor/expert parallel)
+    fsdp         -> weight-dim sharding over the data axes (ZeRO-3-style);
+                    within-pod only, so cross-pod traffic is grad psums.
+    kv_heads     -> 'model' when the arch's kv-head count divides it;
+                    otherwise the model axis moves to the cache sequence dim.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    has_model = "model" in mesh.shape
+    model = "model" if has_model else None
+    msize = mesh.shape.get("model", 1)
+
+    table: Dict[str, AxisVal] = {
+        "batch": data_axes or None,
+        "seq": None,
+        # sequence-parallel residual stream: layer-boundary activations (and
+        # their remat saves) shard over 'model' on the seq dim; matmul
+        # inputs are re-tagged 'seq' (all-gather) and outputs reduce-scatter
+        # back. Train/prefill only (decode has seq=1).
+        "seq_sp": (model if (shape is None or shape.kind != "decode")
+                   else None),
+        "heads": model,
+        "ffn": model,
+        "experts": model,
+        "vocab": model,
+        "dmodel": None,
+        "fsdp": ("data",) if "data" in mesh.shape else None,
+        "layers": None,
+        "head_dim": None,
+        "kv_heads": model,
+        "cache_seq": None,
+        "cache_batch": data_axes or None,
+        "frames": None,
+        "components": model,   # i-vector: UBM Gaussians over model axis
+        "utts": data_axes or None,
+        "ivec": None,
+        "feat": None,
+    }
+
+    if cfg is not None and getattr(cfg, "family", None) != "ivector":
+        kvh = getattr(cfg, "n_kv_heads", 0)
+        if has_model and kvh and kvh % msize != 0:
+            # MQA/GQA with too few kv heads: shard the cache over sequence
+            table["kv_heads"] = None
+            table["cache_seq"] = model
+        if shape is not None and shape.kind == "decode":
+            gb = shape.global_batch
+            dsize = 1
+            for a in data_axes:
+                dsize *= mesh.shape[a]
+            if gb % (dsize or 1) != 0:
+                # tiny-batch decode (long_500k): batch replicated; spread the
+                # cache sequence over the data axes instead
+                table["batch"] = None
+                table["cache_batch"] = None
+                cur = table["cache_seq"]
+                cur_t = (cur,) if isinstance(cur, str) else (cur or ())
+                table["cache_seq"] = tuple(data_axes) + tuple(cur_t)
+    return Rules(mesh=mesh, table=table)

@@ -1,0 +1,226 @@
+"""Paper-core tests: TVM formulations, minimum divergence (incl. the
+Householder reflection), alignment pruning, EM behaviour, realignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.ivector_tvm import SMOKE as IV_SMOKE
+from repro.core import alignment as AL
+from repro.core import backend as BK
+from repro.core import stats as ST
+from repro.core import trainer as TR
+from repro.core import tvm as TV
+from repro.core import ubm as U
+from repro.data.speech import SpeechDataConfig, build_dataset
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _toy_stats(key, Utt=24, C=12, D=6):
+    n = jax.random.uniform(key, (Utt, C), minval=0.5, maxval=5.0)
+    f = jax.random.normal(jax.random.fold_in(key, 1), (Utt, C, D))
+    return n, f
+
+
+def _toy_model(key, C=12, D=6, R=8, formulation="augmented"):
+    means = jax.random.normal(key, (C, D))
+    A = jax.random.normal(jax.random.fold_in(key, 2), (C, D, D)) * 0.2
+    covs = jnp.einsum("cij,ckj->cik", A, A) + jnp.eye(D)
+    return TV.init_model(jax.random.fold_in(key, 3), means, covs, R,
+                         formulation, prior_offset=10.0)
+
+
+# ---------------------------------------------------------------------------
+# Posterior / E-step math (eqs. 3-4)
+# ---------------------------------------------------------------------------
+
+
+def test_posterior_matches_direct_solve():
+    model = _toy_model(KEY)
+    n, f = _toy_stats(jax.random.fold_in(KEY, 7))
+    pre = TV.precompute(model)
+    phi, Phi = TV.posterior(model, pre, n, f)
+    # direct dense check for utterance 0 (eq. 3-4)
+    SigInv = jnp.linalg.inv(model.Sigma)
+    L = jnp.eye(model.rank) + sum(
+        n[0, c] * model.T[c].T @ SigInv[c] @ model.T[c]
+        for c in range(n.shape[1]))
+    rhs = model.prior + sum(model.T[c].T @ SigInv[c] @ f[0, c]
+                            for c in range(n.shape[1]))
+    np.testing.assert_allclose(Phi[0], np.linalg.inv(L), rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(phi[0], np.linalg.solve(L, rhs), rtol=2e-3,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Minimum divergence (§3.1)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_householder_properties(seed):
+    """P2 is orthogonal, involutive, and sends P1 h to a multiple of e1."""
+    key = jax.random.PRNGKey(seed)
+    R = 7
+    h = jax.random.normal(key, (R,))
+    norm = jnp.linalg.norm(h)
+    h_t = h / jnp.maximum(norm, 1e-10)
+    e1 = jnp.zeros((R,)).at[0].set(1.0)
+    denom = jnp.maximum(2.0 * (1.0 - h_t[0]), 1e-10)
+    alpha = denom ** -0.5
+    a = alpha * h_t - alpha * e1
+    P2 = jnp.eye(R) - 2.0 * a[:, None] * a[None, :]
+    if float(1.0 - h_t[0]) < 1e-8:
+        return  # degenerate branch: P2 = I by construction
+    np.testing.assert_allclose(P2 @ P2.T, jnp.eye(R), atol=1e-4)
+    out = P2 @ h_t
+    np.testing.assert_allclose(out[1:], np.zeros(R - 1), atol=1e-4)
+    assert abs(float(out[0]) - 1.0) < 1e-4
+
+
+def test_min_divergence_whitens_and_centres():
+    """After min-div the implied i-vector distribution is whitened; the
+    augmented prior offset has a single non-zero (first) element."""
+    model = _toy_model(KEY, formulation="augmented")
+    n, f = _toy_stats(jax.random.fold_in(KEY, 11))
+    pre = TV.precompute(model)
+    acc = TV.em_accumulate(model, pre, n, f)
+    new = TV.min_divergence(model, acc)
+    # prior offset structure (eq. 12 + Householder)
+    np.testing.assert_allclose(new.prior[1:], np.zeros(model.rank - 1),
+                               atol=1e-4)
+    # the transform pair (P1, P2) whitens: recompute G in the new basis.
+    # posterior stats transform as phi' = P2 P1 phi, so
+    # G' = (P2 P1) G (P2 P1)^T should be I
+    nu = acc.n_utts
+    h = acc.h / nu
+    G = acc.H / nu - jnp.outer(h, h)
+    # recover combined transform M from T_new = T_old M^{-1}: solve via lstsq
+    M_inv = jnp.linalg.lstsq(model.T.reshape(-1, model.rank),
+                             new.T.reshape(-1, model.rank))[0]
+    M = jnp.linalg.inv(M_inv)
+    Gp = M @ G @ M.T
+    np.testing.assert_allclose(Gp, jnp.eye(model.rank), atol=5e-3)
+
+
+def test_min_divergence_standard_keeps_means():
+    model = _toy_model(KEY, formulation="standard")
+    n, f = _toy_stats(jax.random.fold_in(KEY, 12))
+    pre = TV.precompute(model)
+    acc = TV.em_accumulate(model, pre, n, f)
+    new = TV.min_divergence(model, acc, update_means=False)
+    np.testing.assert_allclose(new.means, model.means)
+    assert float(jnp.linalg.norm(new.prior)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Alignment (§4.2 recipe)
+# ---------------------------------------------------------------------------
+
+
+def _toy_ubm(key, C=8, D=5):
+    means = jax.random.normal(key, (C, D)) * 2
+    A = jax.random.normal(jax.random.fold_in(key, 1), (C, D, D)) * 0.2
+    covs = jnp.einsum("cij,ckj->cik", A, A) + jnp.eye(D)
+    w = jnp.ones((C,)) / C
+    return U.FullGMM(w, means, covs)
+
+
+def test_alignment_prune_renormalise():
+    ubm = _toy_ubm(jax.random.fold_in(KEY, 20))
+    x = jax.random.normal(jax.random.fold_in(KEY, 21), (64, 5))
+    post = AL.align_frames(x, ubm, ubm.to_diag(), top_k=4, floor=0.025)
+    s = np.asarray(jnp.sum(post.values, axis=1))
+    np.testing.assert_allclose(s, np.ones_like(s), atol=1e-5)
+    v = np.asarray(post.values)
+    assert ((v == 0) | (v >= 0.025 / (v.sum(1, keepdims=True) + 1e-9))).all()
+    # indices within range and unique per frame
+    idx = np.asarray(post.indices)
+    assert (idx >= 0).all() and (idx < 8).all()
+    for r in idx:
+        assert len(set(r.tolist())) == len(r)
+
+
+def test_bw_stats_consistency():
+    ubm = _toy_ubm(jax.random.fold_in(KEY, 22))
+    x = jax.random.normal(jax.random.fold_in(KEY, 23), (64, 5))
+    post = AL.align_frames(x, ubm, ubm.to_diag(), top_k=8, floor=0.0)
+    st_ = ST.accumulate(x, post, 8, second_order=True)
+    np.testing.assert_allclose(float(jnp.sum(st_.n)), 64.0, rtol=1e-5)
+    # f_c within convex hull scale: sum_c f_c == sum_t x_t
+    np.testing.assert_allclose(np.asarray(jnp.sum(st_.f, axis=0)),
+                               np.asarray(jnp.sum(x, axis=0)), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(st_.S, axis=0)),
+        np.asarray(x.T @ x), rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: EM improves the model; both formulations work; realignment
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    dc = SpeechDataConfig(feat_dim=8, n_components=8, n_speakers=12,
+                          utts_per_speaker=6, frames_per_utt=50,
+                          speaker_rank=6, channel_rank=3,
+                          speaker_scale=0.8, channel_scale=0.8)
+    feats, labels = build_dataset(dc)
+    frames = feats.reshape(-1, feats.shape[-1])
+    ubm = U.train_ubm(frames, 16, jax.random.PRNGKey(3), diag_iters=4,
+                      full_iters=2)
+    return feats, labels, ubm
+
+
+@pytest.mark.parametrize("formulation", ["standard", "augmented"])
+def test_training_separates_speakers(tiny_data, formulation):
+    feats, labels, ubm = tiny_data
+    cfg = IV_SMOKE.with_overrides(
+        feat_dim=8, n_components=16, ivector_dim=12, posterior_top_k=8,
+        formulation=formulation, lda_dim=8, n_iters=3)
+    state = TR.train(cfg, ubm, feats, n_iters=3)
+    ivecs = np.asarray(TR.extract(cfg, state, feats))
+    assert np.isfinite(ivecs).all()
+    # speaker separability: within-speaker cosine > between-speaker cosine
+    x = np.asarray(BK.length_norm(jnp.asarray(ivecs - ivecs.mean(0))))
+    sims = x @ x.T
+    same = np.asarray(labels)[:, None] == np.asarray(labels)[None, :]
+    off = ~np.eye(len(labels), dtype=bool)
+    assert sims[same & off].mean() > sims[~same].mean() + 0.05
+
+
+def test_realignment_updates_ubm_means(tiny_data):
+    feats, labels, ubm = tiny_data
+    cfg = IV_SMOKE.with_overrides(
+        feat_dim=8, n_components=16, ivector_dim=12, posterior_top_k=8,
+        formulation="augmented", realign_interval=1, n_iters=2)
+    snaps = []
+
+    def cb(state, diag):
+        snaps.append(TV.TVModel(state.model.T, state.model.Sigma,
+                                state.model.prior, state.model.means,
+                                state.model.formulation))
+
+    state = TR.train(cfg, ubm, feats, n_iters=2, callback=cb)
+    assert not np.allclose(np.asarray(state.ubm.means),
+                           np.asarray(ubm.means))
+    # write-back identity (§3.2 step 5): the UBM means in use after iter 2
+    # are the first T column x p of the model as it stood after iter 1
+    np.testing.assert_allclose(
+        np.asarray(state.ubm.means),
+        np.asarray(TV.updated_ubm_means(snaps[0])), rtol=1e-4, atol=1e-5)
+
+
+def test_eer_sane(tiny_data):
+    scores = np.concatenate([np.random.default_rng(0).normal(1, 1, 500),
+                             np.random.default_rng(1).normal(-1, 1, 500)])
+    labels = np.concatenate([np.ones(500), np.zeros(500)])
+    e = BK.eer(scores, labels)
+    assert 0.05 < e < 0.35
+    assert BK.eer(np.concatenate([np.ones(10), np.zeros(10) - 1]),
+                  np.concatenate([np.ones(10), np.zeros(10)])) == 0.0

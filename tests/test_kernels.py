@@ -1,0 +1,111 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def k(i):
+    return jax.random.fold_in(KEY, i)
+
+
+@pytest.mark.parametrize("F,D,C,bf,bc", [
+    (256, 8, 32, 128, 32),
+    (512, 12, 64, 256, 64),
+    (128, 20, 16, 64, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm_loglik(F, D, C, bf, bc, dtype):
+    x = jax.random.normal(k(1), (F, D), dtype)
+    const = jax.random.normal(k(2), (C,), jnp.float32)
+    lin = jax.random.normal(k(3), (D, C), jnp.float32)
+    A = jax.random.normal(k(4), (C, D, D)) * 0.3
+    P = (jnp.einsum("cij,ckj->cik", A, A) + jnp.eye(D)).reshape(C, D * D)
+    want = ref.gmm_loglik(x.astype(jnp.float32), const, lin, P)
+    with ops.use_pallas(True):
+        got = ops.gmm_loglik(x, const, lin, P, block_f=bf, block_c=bc)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-1
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("F,D,C", [(256, 8, 32), (512, 16, 64)])
+def test_bw_stats(F, D, C):
+    x = jax.random.normal(k(5), (F, D))
+    g = jax.nn.softmax(jax.random.normal(k(6), (F, C)))
+    wn, wf, wS = ref.bw_stats(g, x)
+    with ops.use_pallas(True):
+        gn, gf, gS = ops.bw_stats(g, x, block_f=128, block_c=16)
+    np.testing.assert_allclose(gn, wn, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gf, wf, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gS, wS, rtol=1e-5, atol=1e-4)
+    # invariant: sum_c n_c == number of frames (posteriors sum to 1)
+    np.testing.assert_allclose(jnp.sum(gn), F, rtol=1e-5)
+
+
+@pytest.mark.parametrize("U,C,R", [(32, 16, 12), (64, 64, 24)])
+def test_tvm_estep_packed(U, C, R):
+    P = R * (R + 1) // 2
+    n = jax.random.uniform(k(7), (U, C))
+    M = jax.random.normal(k(8), (C, R, R))
+    M = M + jnp.swapaxes(M, 1, 2)
+    Up = ref.pack_symmetric(M)
+    want_dense = jnp.einsum("uc,crs->urs", n, M)
+    with ops.use_pallas(True):
+        got_packed = ops.packed_symmetric_accumulate(
+            n, Up, block_u=16, block_p=max(P // 2, 1), block_c=16)
+    got_dense = ref.unpack_symmetric(got_packed, R)
+    np.testing.assert_allclose(got_dense, want_dense, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("B,S,H,KVH,hd,bq,bk", [
+    (2, 128, 4, 2, 32, 64, 64),
+    (1, 256, 8, 1, 16, 64, 128),   # MQA
+    (2, 64, 2, 2, 64, 32, 32),     # MHA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, H, KVH, hd, bq, bk, dtype):
+    q = jax.random.normal(k(9), (B, S, H, hd), dtype)
+    kk = jax.random.normal(k(10), (B, S, KVH, hd), dtype)
+    v = jax.random.normal(k(11), (B, S, KVH, hd), dtype)
+    want = ref.flash_attention(q.astype(jnp.float32),
+                               kk.astype(jnp.float32),
+                               v.astype(jnp.float32))
+    with ops.use_pallas(True):
+        got = ops.flash_attention(q, kk, v, block_q=bq, block_k=bk)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got.astype(jnp.float32), want, rtol=tol,
+                               atol=tol)
+
+
+def test_pack_unpack_roundtrip():
+    M = jax.random.normal(k(12), (5, 9, 9))
+    M = M + jnp.swapaxes(M, 1, 2)
+    np.testing.assert_allclose(
+        ref.unpack_symmetric(ref.pack_symmetric(M), 9), M, rtol=1e-6)
+
+
+@pytest.mark.parametrize("B,T,di,ds,bt,bd", [(2, 64, 32, 8, 32, 16),
+                                             (1, 128, 16, 4, 64, 16)])
+def test_selective_scan_kernel(B, T, di, ds, bt, bd):
+    from repro.kernels.selective_scan import selective_scan
+    dt = jax.nn.softplus(jax.random.normal(k(20), (B, T, di)))
+    dx = jax.random.normal(k(21), (B, T, di))
+    A = -jnp.exp(jax.random.normal(k(22), (di, ds)) * 0.2)
+    Bc = jax.random.normal(k(23), (B, T, ds))
+    Cc = jax.random.normal(k(24), (B, T, ds))
+    got = selective_scan(dt, dx, A, Bc, Cc, block_t=bt, block_d=bd,
+                         interpret=True)
+    # sequential oracle
+    h = jnp.zeros((B, di, ds))
+    ys = []
+    for t in range(T):
+        a = jnp.exp(dt[:, t, :, None] * A[None])
+        h = a * h + dx[:, t, :, None] * Bc[:, t, None, :]
+        ys.append(jnp.einsum("bds,bs->bd", h, Cc[:, t]))
+    want = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,101 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import backend as BK
+from repro.kernels import ref
+
+CONFIG = dict(max_examples=20, deadline=None)
+
+
+@settings(**CONFIG)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.integers(8, 40))
+def test_length_norm_unit(seed, d, n):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * 10
+    y = BK.length_norm(x)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=1),
+                               np.ones(n), rtol=1e-5)
+
+
+@settings(**CONFIG)
+@given(st.integers(0, 10_000))
+def test_whitener_whitens(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (200, 6)) * \
+        jnp.asarray([1.0, 2.0, 0.5, 3.0, 1.5, 0.1])
+    mu, W = BK.whitener(x)
+    xc = (x - mu) @ W.T
+    cov = np.cov(np.asarray(xc).T, bias=True)
+    np.testing.assert_allclose(cov, np.eye(6), atol=5e-2)
+
+
+@settings(**CONFIG)
+@given(st.integers(0, 10_000), st.integers(3, 10))
+def test_pack_unpack_symmetric(seed, R):
+    M = jax.random.normal(jax.random.PRNGKey(seed), (4, R, R))
+    M = M + jnp.swapaxes(M, 1, 2)
+    np.testing.assert_allclose(
+        np.asarray(ref.unpack_symmetric(ref.pack_symmetric(M), R)),
+        np.asarray(M), rtol=1e-6, atol=1e-6)
+
+
+@settings(**CONFIG)
+@given(st.integers(0, 10_000))
+def test_plda_scores_symmetric_in_speaker_swap(seed):
+    """Two-covariance LLR is symmetric: score(x, y) == score(y, x)."""
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (30, 5))
+    labels = np.repeat(np.arange(6), 5)
+    plda = BK.train_plda(x, labels)
+    a = jax.random.normal(jax.random.fold_in(k, 1), (4, 5))
+    b = jax.random.normal(jax.random.fold_in(k, 2), (4, 5))
+    s_ab = np.asarray(BK.plda_score_matrix(plda, a, b))
+    s_ba = np.asarray(BK.plda_score_matrix(plda, b, a))
+    np.testing.assert_allclose(s_ab, s_ba.T, rtol=1e-4, atol=1e-4)
+
+
+@settings(**CONFIG)
+@given(st.integers(0, 10_000))
+def test_plda_prefers_same_speaker(seed):
+    """Pairs from the same class score above pairs from different classes
+    (on data actually drawn from the two-covariance model)."""
+    rng = np.random.default_rng(seed)
+    D, n_spk, n_utt = 4, 8, 10
+    spk_means = rng.normal(0, 2.0, (n_spk, D))
+    x = np.concatenate([m + rng.normal(0, 0.5, (n_utt, D))
+                        for m in spk_means])
+    labels = np.repeat(np.arange(n_spk), n_utt)
+    plda = BK.train_plda(jnp.asarray(x, jnp.float32), labels)
+    s = np.asarray(BK.plda_score_matrix(plda, jnp.asarray(x, jnp.float32),
+                                        jnp.asarray(x, jnp.float32)))
+    same = labels[:, None] == labels[None, :]
+    off = ~np.eye(len(labels), dtype=bool)
+    assert s[same & off].mean() > s[~same].mean()
+
+
+@settings(**CONFIG)
+@given(st.integers(0, 10_000))
+def test_eer_bounds_and_symmetry(seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.normal(0, 1, 400)
+    labels = rng.integers(0, 2, 400)
+    if labels.sum() in (0, 400):
+        return
+    e = BK.eer(scores, labels)
+    assert 0.0 <= e <= 1.0
+    # score shift invariance
+    assert abs(BK.eer(scores + 5.0, labels) - e) < 1e-9
+
+
+@settings(**CONFIG)
+@given(st.integers(0, 10_000), st.sampled_from([16, 32, 64]))
+def test_flash_attention_row_stochastic(seed, S):
+    """Attention outputs are convex combinations of V rows: with V == 1
+    everywhere the output must be exactly 1."""
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (1, S, 2, 8))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (1, S, 2, 8))
+    v = jnp.ones((1, S, 2, 8))
+    out = ref.flash_attention(q, kk, v)
+    np.testing.assert_allclose(np.asarray(out), np.ones_like(out), atol=1e-5)
