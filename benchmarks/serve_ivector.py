@@ -1,0 +1,87 @@
+"""Serving throughput benchmark: utts/sec and real-time factor vs. batch
+size for the variable-length ``IVectorExtractor`` session.
+
+    PYTHONPATH=src python -m benchmarks.serve_ivector --smoke
+
+Ragged synthetic traffic (uniform lengths) is pushed through one serving
+session per batch size; buckets are pre-warmed so the numbers measure
+steady-state serving, not compilation.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_CFG
+from repro.core import trainer as TR
+from repro.core import ubm as U
+from repro.data.speech import (FRAME_RATE, SpeechDataConfig,
+                               build_ragged_dataset)
+from repro.serving import IVectorExtractor, ServingConfig
+
+
+def _setup(smoke: bool):
+    cfg = BENCH_CFG
+    data_cfg = SpeechDataConfig(
+        feat_dim=cfg.feat_dim, n_components=16,
+        n_speakers=8 if smoke else 24,
+        utts_per_speaker=6 if smoke else 12,
+        frames_per_utt=160 if smoke else 512,
+        min_frames_per_utt=40 if smoke else 128,
+        speaker_rank=6, channel_rank=3)
+    utts, _ = build_ragged_dataset(data_cfg)
+    frames = jnp.concatenate([jnp.asarray(u) for u in utts], axis=0)
+    ubm = U.train_ubm(frames, cfg.n_components, jax.random.PRNGKey(0),
+                      diag_iters=3, full_iters=2)
+    fixed = jnp.stack([jnp.asarray(u)[:data_cfg.min_frames_per_utt]
+                       for u in utts])
+    state = TR.train(cfg, ubm, fixed, n_iters=1)
+    return cfg, state, [np.asarray(u) for u in utts]
+
+
+def run(smoke: bool = True, batch_sizes=(2, 8), min_bucket: int = 32,
+        repeats: int = 3) -> dict:
+    cfg, state, utts = _setup(smoke)
+    total_frames = sum(u.shape[0] for u in utts)
+    audio_s = total_frames / FRAME_RATE
+    result = {"n_utts": len(utts), "total_frames": total_frames,
+              "audio_seconds": audio_s, "by_batch": {}}
+    for bs in batch_sizes:
+        ex = IVectorExtractor.from_state(
+            cfg, state, ServingConfig(max_batch=bs, min_bucket=min_bucket))
+        ex.extract(utts)                        # warm every bucket
+        t0 = time.time()
+        for _ in range(repeats):
+            out = ex.extract(utts)
+        wall = (time.time() - t0) / repeats
+        result["by_batch"][bs] = {
+            "utts_per_s": len(utts) / wall,
+            "real_time_factor": audio_s / wall,
+            "wall_s": wall,
+            "buckets": ex.buckets(),
+            "batches_per_pass": ex.stats["batches"] // (repeats + 1),
+        }
+        assert np.isfinite(out).all()
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch-sizes", type=int, nargs="+", default=[2, 8])
+    args = ap.parse_args()
+    res = run(smoke=args.smoke, batch_sizes=tuple(args.batch_sizes))
+    print(f"serving {res['n_utts']} ragged utts "
+          f"({res['audio_seconds']:.1f}s audio):")
+    for bs, r in res["by_batch"].items():
+        print(f"  batch={bs:>3}: {r['utts_per_s']:8.1f} utts/s, "
+              f"{r['real_time_factor']:8.1f}x real time "
+              f"(buckets {r['buckets']})")
+
+
+if __name__ == "__main__":
+    main()

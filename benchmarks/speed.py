@@ -22,8 +22,7 @@ from repro.core import trainer as TR
 from repro.core import tvm as TV
 from repro.core import ubm as U
 from repro.core.pipeline import prepare
-
-FRAME_RATE = 100.0  # frames per second of audio (10 ms hop, paper setup)
+from repro.data.speech import FRAME_RATE
 
 
 def _timeit(fn, *args, n=3):

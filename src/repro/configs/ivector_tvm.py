@@ -31,6 +31,9 @@ class IVectorConfig:
     # psums (EXPERIMENTS.md §Perf ivector iter 1: rf 0.002 -> see table)
     utts_per_batch: int = 8192   # global; sharded over (pod, data)
     frames_per_utt: int = 1024   # fixed-size frame batches (paper Fig. 1)
+    # E-step utterance chunk: bounds the live [chunk, R, R] posterior
+    # covariances (see tvm.em_accumulate_scan); ragged tails are exact
+    estep_chunk: int = 512
     lda_dim: int = 200
     param_dtype: str = "float32"
     # stats/matmul compute dtype; bf16 w/ fp32 accumulation on TPU

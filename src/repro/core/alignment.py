@@ -1,5 +1,5 @@
 """Frame alignment: posterior computation with Kaldi's pruning recipe
-(paper §4.2), adapted to TPU (DESIGN.md §2).
+(paper §4.2), adapted to TPU (DESIGN.md §2-§3).
 
 1. diagonal-covariance preselection scores (cheap matmul),
 2. full-covariance log-likelihoods evaluated DENSELY (vec-trick matmul; on
@@ -28,13 +28,17 @@ class SparsePosteriors(NamedTuple):
 
 
 def align_frames(x, full: U.FullGMM, diag: U.DiagGMM, *, top_k: int = 20,
-                 floor: float = 0.025, precomp=None) -> SparsePosteriors:
+                 floor: float = 0.025, precomp=None,
+                 mask=None) -> SparsePosteriors:
     """x: [F, D] -> sparse pruned-renormalised posteriors.
 
     Follows Kaldi/the paper: preselect with the diag UBM, score the
     selected components with the full UBM, floor + renormalise. The dense
     TPU adaptation evaluates full-cov loglik for all C and masks to the
     diag-selected set (identical result, matmul-friendly).
+
+    ``mask`` ([F], bool/0-1) marks valid frames; masked-out (padding)
+    frames get all-zero posteriors so they contribute nothing downstream.
     """
     diag_ll = U.diag_loglik(diag, x)                       # [F, C]
     _, sel = jax.lax.top_k(diag_ll, top_k)                 # [F, K]
@@ -44,9 +48,20 @@ def align_frames(x, full: U.FullGMM, diag: U.DiagGMM, *, top_k: int = 20,
     sel_ll = sel_ll - jax.scipy.special.logsumexp(sel_ll, axis=1,
                                                   keepdims=True)
     post = jnp.exp(sel_ll)
-    # floor + renormalise (paper: drop < 0.025, rescale to sum 1)
-    post = jnp.where(post < floor, 0.0, post)
+    # floor + renormalise (paper: drop < 0.025, rescale to sum 1). Kaldi
+    # never lets a frame vanish: if flooring would zero every posterior,
+    # keep the arg-max component (otherwise the frame silently drops out
+    # of the statistics and the renormalisation divides by the guard).
+    keep = post >= floor
+    K = post.shape[1]
+    best = jax.nn.one_hot(jnp.argmax(post, axis=1), K, dtype=bool)
+    keep = keep | (~jnp.any(keep, axis=1, keepdims=True) & best)
+    post = jnp.where(keep, post, 0.0)
     post = post / jnp.maximum(jnp.sum(post, axis=1, keepdims=True), 1e-10)
+    if mask is not None:
+        # where, not multiply: garbage padding frames can produce NaN/inf
+        # posteriors (overflowing logliks), and NaN * 0 == NaN
+        post = jnp.where(mask.astype(bool)[:, None], post, 0.0)
     return SparsePosteriors(post.astype(f32), sel)
 
 

@@ -17,9 +17,13 @@ from repro.data.speech import SpeechDataConfig, build_dataset, make_trials
 
 
 def evaluate_state(cfg: IVectorConfig, state: TR.TrainState, feats,
-                   labels, seed: int = 0) -> float:
-    """EER of the trained extractor on held-out trials."""
-    ivecs = TR.extract(cfg, state, feats)
+                   labels, seed: int = 0, mask=None) -> float:
+    """EER of the trained extractor on held-out trials.
+
+    ``mask`` ([U, F], optional) marks valid frames so padded variable-
+    length evaluation batches score identically to unpadded utterances.
+    """
+    ivecs = TR.extract(cfg, state, feats, mask=mask)
     mu = jnp.mean(ivecs, axis=0)
     x = ivecs - mu
     if not cfg.min_divergence:

@@ -28,33 +28,48 @@ class BWStats(NamedTuple):
 
 
 def accumulate(x, post: SparsePosteriors, C: int,
-               second_order: bool = False) -> BWStats:
-    """x: [F, D] single utterance -> per-utterance stats (U dim absent)."""
+               second_order: bool = False, mask=None) -> BWStats:
+    """x: [F, D] single utterance -> per-utterance stats (U dim absent).
+
+    ``mask`` ([F], bool/0-1) marks valid frames; masked-out frames are
+    excluded from n/f/S entirely (the frame features are zeroed too, so
+    arbitrary garbage in padding frames cannot pollute the statistics).
+    """
     F, D = x.shape
     K = post.values.shape[1]
+    values = post.values
+    if mask is not None:
+        # where, not multiply: NaN/inf in garbage padding frames must not
+        # survive masking (NaN * 0 == NaN)
+        valid = mask.astype(bool)[:, None]
+        values = jnp.where(valid, values, 0.0)
+        x = jnp.where(valid, x, 0.0)
     rows = post.indices.reshape(-1)            # [F*K]
-    vals = post.values.reshape(-1)             # [F*K]
+    vals = values.reshape(-1)                  # [F*K]
     n = jnp.zeros((C,), f32).at[rows].add(vals)
-    xw = (post.values[:, :, None] * x[:, None, :]).reshape(F * K, D)
+    xw = (values[:, :, None] * x[:, None, :]).reshape(F * K, D)
     f = jnp.zeros((C, D), f32).at[rows].add(xw)
     S = None
     if second_order:
         x2 = (x[:, :, None] * x[:, None, :]).reshape(F, D * D)
-        x2w = (post.values[:, :, None] * x2[:, None, :]).reshape(F * K, D * D)
+        x2w = (values[:, :, None] * x2[:, None, :]).reshape(F * K, D * D)
         S = jnp.zeros((C, D * D), f32).at[rows].add(x2w).reshape(C, D, D)
     return BWStats(n, f, S)
 
 
 def accumulate_batch(xs, posts: SparsePosteriors, C: int,
-                     second_order: bool = False) -> BWStats:
+                     second_order: bool = False, mask=None) -> BWStats:
     """xs: [U, F, D]; posts values/indices: [U, F, K] -> batched stats.
 
     n, f keep the utterance dim (the TVM E-step needs per-utterance stats);
     S is summed over utterances (only its total enters the Σ update).
+    ``mask`` ([U, F]) marks valid frames per utterance.
     """
-    fn = jax.vmap(lambda x, v, i: accumulate(
-        x, SparsePosteriors(v, i), C, second_order))
-    st = fn(xs, posts.values, posts.indices)
+    # mask=None rides through vmap as an empty pytree (in_axes=None)
+    fn = jax.vmap(lambda x, v, i, m: accumulate(
+        x, SparsePosteriors(v, i), C, second_order, mask=m),
+        in_axes=(0, 0, 0, None if mask is None else 0))
+    st = fn(xs, posts.values, posts.indices, mask)
     S = jnp.sum(st.S, axis=0) if second_order else None
     return BWStats(st.n, st.f, S)
 

@@ -34,15 +34,21 @@ class TrainState:
 
 
 def _align_and_stats(cfg: IVectorConfig, ubm: U.FullGMM, feats,
-                     second_order: bool):
-    """feats: [U, F, D] -> BWStats (n [U,C], f [U,C,D], S [C,D,D]|None)."""
+                     second_order: bool, mask=None):
+    """feats: [U, F, D] -> BWStats (n [U,C], f [U,C,D], S [C,D,D]|None).
+
+    ``mask`` ([U, F], optional) marks valid frames; padding frames are
+    excluded from both the posteriors and the accumulated statistics.
+    """
     diag = ubm.to_diag()
     pre = U.full_precisions(ubm)
-    post = jax.vmap(lambda x: AL.align_frames(
-        x, ubm, diag, top_k=cfg.posterior_top_k, floor=cfg.posterior_floor,
-        precomp=pre))(feats)
+    # mask=None rides through vmap as an empty pytree (in_axes=None)
+    post = jax.vmap(lambda x, m: AL.align_frames(
+        x, ubm, diag, top_k=cfg.posterior_top_k,
+        floor=cfg.posterior_floor, precomp=pre, mask=m),
+        in_axes=(0, None if mask is None else 0))(feats, mask)
     return ST.accumulate_batch(feats, post, cfg.n_components,
-                               second_order=second_order)
+                               second_order=second_order, mask=mask)
 
 
 import functools
@@ -50,8 +56,8 @@ import functools
 
 @functools.lru_cache(maxsize=64)
 def make_stats_fn(cfg: IVectorConfig):
-    return jax.jit(lambda ubm, feats: _align_and_stats(
-        cfg, ubm, feats, cfg.update_sigma))
+    return jax.jit(lambda ubm, feats, mask=None: _align_and_stats(
+        cfg, ubm, feats, cfg.update_sigma, mask=mask))
 
 
 @functools.lru_cache(maxsize=64)
@@ -65,7 +71,8 @@ def make_em_fn(cfg: IVectorConfig):
         else:
             n_, f_, S_ = n, f, S_tot
         pre = TV.precompute(model)
-        acc = TV.em_accumulate(model, pre, n_, f_)
+        acc = TV.em_accumulate_scan(model, pre, n_, f_,
+                                    chunk=cfg.estep_chunk)
         model = TV.m_step(model, acc, S_ if cfg.update_sigma else None,
                           cfg.update_sigma)
         if cfg.min_divergence:
@@ -104,10 +111,15 @@ def train(cfg: IVectorConfig, ubm: U.FullGMM, feats,
     return state
 
 
-def extract(cfg: IVectorConfig, state: TrainState, feats) -> jax.Array:
-    """i-vectors for [U, F, D] features using the trained model + UBM."""
+def extract(cfg: IVectorConfig, state: TrainState, feats,
+            mask=None) -> jax.Array:
+    """i-vectors for [U, F, D] features using the trained model + UBM.
+
+    ``mask`` ([U, F], optional) marks valid frames so padded variable-
+    length batches extract identically to their unpadded utterances.
+    """
     stats_fn = make_stats_fn(cfg)
-    st = stats_fn(state.ubm, feats)
+    st = stats_fn(state.ubm, feats, mask)
     model = state.model
     if model.formulation == "standard":
         stc = ST.center(ST.BWStats(st.n, st.f, None), model.means)

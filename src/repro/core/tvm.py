@@ -118,12 +118,16 @@ def em_accumulate_scan(model: TVModel, pre: Precomp, n, f,
                        chunk: int = 512) -> EMAccum:
     """Chunked E-step: scans utterance sub-batches so the per-utterance
     posterior covariances ([chunk, R, R], not [U, R, R]) never exist all at
-    once — at pod-scale batches the unchunked form is terabytes."""
+    once — at pod-scale batches the unchunked form is terabytes.
+
+    A ragged tail (U % chunk != 0) is processed as one remainder chunk, so
+    arbitrary batch sizes keep the bounded [chunk, R, R] footprint (falling
+    back to the unchunked path would be exactly the memory blow-up the
+    chunking exists to avoid)."""
     U_, C = n.shape
     chunk = min(chunk, U_)
-    if U_ % chunk != 0:
-        return em_accumulate(model, pre, n, f)
     g = U_ // chunk
+    rem = U_ % chunk
     R, D = model.rank, model.T.shape[1]
 
     def body(carry, inp):
@@ -134,9 +138,12 @@ def em_accumulate_scan(model: TVModel, pre: Precomp, n, f,
     zero = EMAccum(A=jnp.zeros((C, R, R), f32), B=jnp.zeros((C, D, R), f32),
                    h=jnp.zeros((R,), f32), H=jnp.zeros((R, R), f32),
                    n_tot=jnp.zeros((C,), f32), n_utts=jnp.zeros((), f32))
-    nr = n.reshape(g, chunk, C)
-    fr = f.reshape(g, chunk, C, D)
+    nr = n[:g * chunk].reshape(g, chunk, C)
+    fr = f[:g * chunk].reshape(g, chunk, C, D)
     acc, _ = jax.lax.scan(body, zero, (nr, fr))
+    if rem:
+        acc = merge_accums(
+            acc, em_accumulate(model, pre, n[g * chunk:], f[g * chunk:]))
     return acc
 
 

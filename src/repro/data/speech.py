@@ -10,13 +10,17 @@ shardable by utterance id.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 f32 = jnp.float32
+
+# frames per second of audio the features stand in for (10 ms hop, paper
+# setup); real-time factors everywhere are computed against this
+FRAME_RATE = 100.0
 
 
 @dataclass(frozen=True)
@@ -26,6 +30,10 @@ class SpeechDataConfig:
     n_speakers: int = 40
     utts_per_speaker: int = 12
     frames_per_utt: int = 200
+    # ragged traffic: when set (< frames_per_utt), utterance lengths are
+    # drawn uniformly from [min_frames_per_utt, frames_per_utt] — the
+    # variable-length regime the serving path buckets and masks
+    min_frames_per_utt: Optional[int] = None
     speaker_rank: int = 16
     channel_rank: int = 8
     speaker_scale: float = 1.6
@@ -78,6 +86,32 @@ def build_dataset(cfg: SpeechDataConfig
             feats.append(sample(s, k))
             labels.append(s)
     return jnp.stack(feats), np.asarray(labels)
+
+
+def utterance_lengths(cfg: SpeechDataConfig) -> np.ndarray:
+    """Deterministic per-utterance frame counts [U] (row-major speaker/utt
+    order, same as ``build_dataset``). Uniform over
+    [min_frames_per_utt, frames_per_utt]; degenerate (all equal) when the
+    ragged range is unset."""
+    U = cfg.n_speakers * cfg.utts_per_speaker
+    if cfg.min_frames_per_utt is None:
+        return np.full((U,), cfg.frames_per_utt, np.int64)
+    rng = np.random.default_rng(cfg.seed + 7919)
+    return rng.integers(cfg.min_frames_per_utt, cfg.frames_per_utt + 1,
+                        size=U)
+
+
+def build_ragged_dataset(cfg: SpeechDataConfig
+                         ) -> Tuple[List[jax.Array], np.ndarray]:
+    """Variable-length variant of ``build_dataset``.
+
+    Returns (list of [F_i, D] utterances, speaker_labels [U]). Each
+    utterance is the deterministic fixed-length sample truncated to its
+    drawn length, so utterance i's frames are a prefix of what
+    ``build_dataset`` produces for the same (seed, speaker, utt)."""
+    fixed, labels = build_dataset(cfg)
+    lengths = utterance_lengths(cfg)
+    return [fixed[i, :int(n)] for i, n in enumerate(lengths)], labels
 
 
 def make_trials(labels: np.ndarray, ivec_ids: np.ndarray, rng: np.random.Generator,

@@ -1,0 +1,16 @@
+"""Version-compatibility helpers for Pallas TPU APIs."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; fail
+# loudly at import time if neither exists rather than at first kernel call
+try:
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:
+    try:
+        CompilerParams = pltpu.TPUCompilerParams
+    except AttributeError as e:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; unsupported jax version") from e

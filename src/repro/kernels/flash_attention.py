@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _COMPILER_PARAMS
+
 f32 = jnp.float32
 _NEG = -1e30
 
@@ -90,7 +92,7 @@ def flash_attention(q, k, v, *, block_q: int = 256, block_k: int = 256,
             pltpu.VMEM((bq,), f32),
             pltpu.VMEM((bq,), f32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

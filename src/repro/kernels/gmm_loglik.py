@@ -18,6 +18,10 @@ from jax.experimental import pallas as pl
 
 f32 = jnp.float32
 
+# default block sizes; the ops.py wrapper pads ragged shapes against these
+BLOCK_F = 256
+BLOCK_C = 128
+
 
 def _kernel(x_ref, const_ref, lin_ref, p_ref, out_ref):
     x = x_ref[...].astype(f32)                       # [BF, D]
@@ -33,8 +37,8 @@ def _kernel(x_ref, const_ref, lin_ref, p_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_f", "block_c",
                                              "interpret"))
-def gmm_loglik(x, const, lin, P_flat, *, block_f: int = 256,
-               block_c: int = 128, interpret: bool = True):
+def gmm_loglik(x, const, lin, P_flat, *, block_f: int = BLOCK_F,
+               block_c: int = BLOCK_C, interpret: bool = True):
     """x: [F, D]; const: [C]; lin: [D, C]; P_flat: [C, D*D] -> [F, C]."""
     F, D = x.shape
     C = const.shape[0]

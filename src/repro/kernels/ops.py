@@ -33,10 +33,28 @@ def use_pallas(enable: bool = True, interpret: bool = True):
         _INTERPRET.reset(t2)
 
 
+def _ceil_to(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
 def gmm_loglik(x, const, lin, P_flat, **kw):
     if _USE_PALLAS.get():
-        return _gl.gmm_loglik(x, const, lin, P_flat,
-                              interpret=_INTERPRET.get(), **kw)
+        # The Pallas grid needs F and C to divide into whole blocks; ragged
+        # shapes (variable-length serving traffic) are zero-padded here and
+        # the result sliced back — padding rows/components never escape.
+        F, C = x.shape[0], const.shape[0]
+        bf = min(kw.get("block_f", _gl.BLOCK_F), F)
+        bc = min(kw.get("block_c", _gl.BLOCK_C), C)
+        Fp, Cp = _ceil_to(F, bf), _ceil_to(C, bc)
+        if Fp != F:
+            x = jnp.pad(x, ((0, Fp - F), (0, 0)))
+        if Cp != C:
+            const = jnp.pad(const, (0, Cp - C))
+            lin = jnp.pad(lin, ((0, 0), (0, Cp - C)))
+            P_flat = jnp.pad(P_flat, ((0, Cp - C), (0, 0)))
+        out = _gl.gmm_loglik(x, const, lin, P_flat,
+                             interpret=_INTERPRET.get(), **kw)
+        return out[:F, :C] if (Fp, Cp) != (F, C) else out
     return ref.gmm_loglik(x, const, lin, P_flat)
 
 

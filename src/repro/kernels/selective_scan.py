@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _COMPILER_PARAMS
+
 f32 = jnp.float32
 
 
@@ -77,7 +79,7 @@ def selective_scan(dt, dx, A, Bc, Cc, *, block_t: int = 128,
         out_specs=pl.BlockSpec((1, bt, bd), lambda b, d, t: (b, t, d)),
         out_shape=jax.ShapeDtypeStruct((B, T, di), dt.dtype),
         scratch_shapes=[pltpu.VMEM((bd, ds), f32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(dt, dx, A, Bc, Cc)

@@ -207,7 +207,7 @@ class _IvecShape:
 
 
 def model_flops(cfg, n_utts: int) -> float:
-    """Analytic useful FLOPs for one macro-step (per DESIGN.md):
+    """Analytic useful FLOPs for one macro-step (per DESIGN.md §6):
     alignment vec-trick matmul + BW stats + E-step solves/accumulations."""
     C, D, R, K = (cfg.n_components, cfg.feat_dim, cfg.ivector_dim,
                   cfg.posterior_top_k)

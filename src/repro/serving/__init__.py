@@ -1,0 +1,4 @@
+"""Production-facing serving layer: batched variable-length extraction."""
+from repro.serving.extractor import IVectorExtractor, ServingConfig
+
+__all__ = ["IVectorExtractor", "ServingConfig"]

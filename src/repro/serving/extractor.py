@@ -1,0 +1,161 @@
+"""Batched variable-length i-vector extraction service (DESIGN.md §5).
+
+The training stack works on fixed [U, F, D] blocks; production traffic is
+ragged — one utterance per request, each a different number of frames. This
+module turns the trained (UBM, TVM) pair into a serving session:
+
+  * **cached precompute** — ``full_precisions(ubm)`` (Cholesky + inverse of
+    C full covariances), the diag preselection GMM, and ``TV.precompute``
+    (T^T Σ^{-1} T) are computed once per session, not once per call;
+  * **power-of-two frame buckets** — each utterance is zero-padded (with a
+    frame mask) to the next power-of-two frame count, so the number of
+    distinct jitted shapes is O(log max_frames) instead of O(#lengths);
+  * **micro-batching** — requests sharing a bucket are batched up to
+    ``max_batch`` and extracted in one device call; the batch dim is also
+    padded (zero-mask rows), so each bucket compiles exactly once;
+  * **length-norm** — i-vectors are projected to the unit sphere (the form
+    every downstream scorer in this repo consumes).
+
+Masking (core/alignment.py, core/stats.py) makes the padding exact: a
+padded-and-masked utterance produces bit-identical Baum-Welch statistics
+to the unpadded one, so bucketing is a pure performance decision.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ivector_tvm import IVectorConfig
+from repro.core import alignment as AL
+from repro.core import backend as BK
+from repro.core import stats as ST
+from repro.core import tvm as TV
+from repro.core import ubm as U
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    max_batch: int = 16      # micro-batch size (batch dim of each jitted fn)
+    min_bucket: int = 64     # smallest frame bucket
+    max_bucket: int = 8192   # hard cap; longer utterances are truncated
+    length_norm: bool = True
+
+
+class IVectorExtractor:
+    """One serving session: cached per-model precompute + per-bucket jits.
+
+    >>> ex = IVectorExtractor.from_state(cfg, trained_state)
+    >>> ivecs = ex.extract(list_of_[F_i, D]_arrays)   # [N, R] length-normed
+    """
+
+    def __init__(self, cfg: IVectorConfig, model: TV.TVModel,
+                 ubm: U.FullGMM, serving: ServingConfig = ServingConfig()):
+        self.cfg = cfg
+        self.model = model
+        self.ubm = ubm
+        self.serving = serving
+        # expensive per-model precompute, shared by every request
+        self._diag = ubm.to_diag()
+        self._ubm_pre = U.full_precisions(ubm)
+        self._tv_pre = TV.precompute(model)
+        # jit specializes per input shape, so one jitted fn covers every
+        # bucket; _seen_buckets tracks which shapes have been compiled
+        self._fn = jax.jit(self._extract_batch)
+        self._seen_buckets: set = set()
+        self.stats = {"requests": 0, "batches": 0, "compiles": 0,
+                      "real_frames": 0, "padded_frames": 0, "truncated": 0}
+
+    @classmethod
+    def from_state(cls, cfg: IVectorConfig, state,
+                   serving: ServingConfig = ServingConfig()
+                   ) -> "IVectorExtractor":
+        return cls(cfg, state.model, state.ubm, serving)
+
+    # -- bucketing ----------------------------------------------------------
+
+    def bucket_for(self, n_frames: int) -> int:
+        b = self.serving.min_bucket
+        while b < n_frames and b < self.serving.max_bucket:
+            b *= 2
+        return min(b, self.serving.max_bucket)
+
+    def buckets(self) -> List[int]:
+        return sorted(self._seen_buckets)
+
+    # -- the jitted per-bucket extraction -----------------------------------
+
+    def _extract_batch(self, ubm, diag, ubm_pre, model, tv_pre, feats,
+                       mask):
+        """[B, bucket, D], [B, bucket] -> [B, R] (zero rows where mask=0).
+
+        The cached model/precompute pytrees come in as jit ARGUMENTS, not
+        closure constants: constants would be re-embedded into every
+        bucket-shape executable (hundreds of MB each at production scale),
+        arguments share one device buffer across all buckets.
+        """
+        cfg = self.cfg
+        post = jax.vmap(lambda x, m: AL.align_frames(
+            x, ubm, diag, top_k=cfg.posterior_top_k,
+            floor=cfg.posterior_floor, precomp=ubm_pre,
+            mask=m))(feats, mask)
+        st = ST.accumulate_batch(feats, post, cfg.n_components, mask=mask)
+        if model.formulation == "standard":
+            stc = ST.center(ST.BWStats(st.n, st.f, None), model.means)
+            n_, f_ = stc.n, stc.f
+        else:
+            n_, f_ = st.n, st.f
+        iv = TV.extract_ivectors(model, tv_pre, n_, f_)
+        if self.serving.length_norm:
+            iv = BK.length_norm(iv)
+        # zero-occupancy padding rows extract the prior mean; blank them
+        return iv * jnp.any(mask > 0, axis=1)[:, None]
+
+    # -- public API ---------------------------------------------------------
+
+    def extract(self, utterances: Sequence) -> np.ndarray:
+        """Ragged [F_i, D] utterances -> [N, R] i-vectors (input order)."""
+        D = self.ubm.means.shape[1]
+        R = self.model.rank
+        B = self.serving.max_batch
+        utts = [np.asarray(u, np.float32) for u in utterances]
+        for u in utts:
+            if u.ndim != 2 or u.shape[1] != D:
+                raise ValueError(f"utterance must be [F, {D}], got {u.shape}")
+        groups: Dict[int, List[int]] = {}
+        for i, u in enumerate(utts):
+            n = u.shape[0]
+            if n > self.serving.max_bucket:
+                self.stats["truncated"] += 1
+                n = self.serving.max_bucket
+            groups.setdefault(self.bucket_for(n), []).append(i)
+        out = np.zeros((len(utts), R), np.float32)
+        for bucket in sorted(groups):
+            if bucket not in self._seen_buckets:
+                self._seen_buckets.add(bucket)
+                self.stats["compiles"] += 1
+            idxs = groups[bucket]
+            for s in range(0, len(idxs), B):
+                chunk = idxs[s:s + B]
+                feats = np.zeros((B, bucket, D), np.float32)
+                mask = np.zeros((B, bucket), np.float32)
+                for j, i in enumerate(chunk):
+                    n = min(utts[i].shape[0], bucket)
+                    feats[j, :n] = utts[i][:n]
+                    mask[j, :n] = 1.0
+                    self.stats["real_frames"] += n
+                    self.stats["padded_frames"] += bucket - n
+                out[chunk] = np.asarray(self._fn(
+                    self.ubm, self._diag, self._ubm_pre, self.model,
+                    self._tv_pre, jnp.asarray(feats),
+                    jnp.asarray(mask)))[:len(chunk)]
+                self.stats["batches"] += 1
+        self.stats["requests"] += len(utts)
+        return out
+
+    __call__ = extract

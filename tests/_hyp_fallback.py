@@ -1,0 +1,49 @@
+"""Minimal stand-in for ``hypothesis`` so tier-1 collection never dies when
+it is not installed (CI installs the real thing via requirements-dev.txt).
+
+Covers only what this suite uses: ``@settings(...)`` (ignored), ``st.integers``
+/ ``st.sampled_from``, and ``@given`` running the test body on a handful of
+deterministic samples instead of a shrinking search.
+"""
+from __future__ import annotations
+
+import random
+
+N_SAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self.sampler = sampler
+
+
+class strategies:
+    @staticmethod
+    def integers(lo, hi):
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    @staticmethod
+    def sampled_from(xs):
+        xs = list(xs)
+        return _Strategy(lambda rng: rng.choice(xs))
+
+
+def settings(*_a, **_k):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*strats):
+    # NOTE: the wrapper must take no parameters (unlike functools.wraps,
+    # which would preserve the strategy params and make pytest treat them
+    # as fixtures).
+    def deco(fn):
+        def wrapper():
+            rng = random.Random(0)
+            for _ in range(N_SAMPLES):
+                fn(*(s.sampler(rng) for s in strats))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -32,6 +32,27 @@ def test_gmm_loglik(F, D, C, bf, bc, dtype):
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("F,C,bf,bc", [
+    (300, 32, 128, 32),    # ragged F (serving traffic)
+    (256, 30, 128, 16),    # ragged C
+    (193, 23, 64, 16),     # both ragged
+])
+def test_gmm_loglik_ragged_shapes(F, C, bf, bc):
+    """The ops wrapper pads ragged F/C to block multiples and slices back —
+    variable-length serving shapes must match the reference exactly."""
+    D = 8
+    x = jax.random.normal(k(11), (F, D))
+    const = jax.random.normal(k(12), (C,), jnp.float32)
+    lin = jax.random.normal(k(13), (D, C), jnp.float32)
+    A = jax.random.normal(k(14), (C, D, D)) * 0.3
+    P = (jnp.einsum("cij,ckj->cik", A, A) + jnp.eye(D)).reshape(C, D * D)
+    want = ref.gmm_loglik(x, const, lin, P)
+    with ops.use_pallas(True):
+        got = ops.gmm_loglik(x, const, lin, P, block_f=bf, block_c=bc)
+    assert got.shape == (F, C)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("F,D,C", [(256, 8, 32), (512, 16, 64)])
 def test_bw_stats(F, D, C):
     x = jax.random.normal(k(5), (F, D))
