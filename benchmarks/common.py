@@ -7,7 +7,7 @@ import time
 from pathlib import Path
 
 from repro.configs.ivector_tvm import CONFIG as IV_FULL
-from repro.core.pipeline import prepare, run_variant
+from repro.core.pipeline import prepare, run_ensemble, run_variant
 from repro.data.speech import SpeechDataConfig
 
 OUT_DIR = Path(__file__).resolve().parent / "results"
@@ -55,14 +55,10 @@ def cached(name: str, fn):
 
 
 def ensemble_curves(cfg, n_iters, eval_every, seeds):
-    """Average EER curves over random T inits (the paper's methodology)."""
+    """Average EER curves over random T inits (the paper's methodology);
+    thin adapter over `pipeline.run_ensemble`."""
     feats, labels, ubm = prepare(cfg, BENCH_DATA, seed=0)
-    curves = []
-    for s in seeds:
-        r = run_variant(cfg, feats, labels, ubm, n_iters,
-                        eval_every=eval_every, seed=s)
-        curves.append(r["curve"])
-    iters = [it for it, _ in curves[0]]
-    mean = [sum(c[i][1] for c in curves) / len(curves)
-            for i in range(len(iters))]
-    return iters, mean, curves
+    r = run_ensemble(cfg, None, seeds, n_iters, eval_every=eval_every,
+                     feats=feats, labels=labels, ubm=ubm)
+    curves = [r["curves"][str(int(s))] for s in seeds]
+    return r["iters"], r["eer_mean"], curves

@@ -17,6 +17,7 @@ import numpy as np
 
 from benchmarks.common import BENCH_CFG, BENCH_DATA, cached
 from repro.core import alignment as AL
+from repro.core import engine as EN
 from repro.core import stats as ST
 from repro.core import trainer as TR
 from repro.core import tvm as TV
@@ -75,6 +76,78 @@ def naive_em_iteration(model, ubm, feats_np, top_k):
     return A, Bacc
 
 
+def dense_full_em_step(gmm, x):
+    """The RETIRED pre-engine whole-dataset EM step (benchmark baseline
+    only): scores every frame at once and materializes the [F_total, D^2]
+    expansion — 21 GB at the paper's §4.1 scale. Production EM streams
+    through core/engine.py instead."""
+    F, D = x.shape
+    ll = U.full_loglik(gmm, x)
+    post = jnp.exp(ll - jax.scipy.special.logsumexp(ll, 1, keepdims=True))
+    n = jnp.sum(post, axis=0)
+    fsum = post.T @ x
+    x2 = (x[:, :, None] * x[:, None, :]).reshape(F, D * D)   # the blowup
+    ssum = (post.T @ x2).reshape(-1, D, D)
+    return U.full_m_step(n, fsum, ssum)
+
+
+def ubm_em_compare(ubm, frames, top_k_pruned, frame_chunk=512, chunk=1):
+    """One full-covariance EM iteration, old dense whole-dataset path vs
+    engine-streamed: wall time + analytic peak frame-resident bytes.
+
+    Two engine rows: exact (top_k = C, identical responsibilities) and
+    pruned (Kaldi's gselect regime, which only the engine path supports).
+    """
+    C = ubm.n_components
+    F_tot, D = frames.shape
+    feats, mask = U._as_utterances(frames, None, frame_chunk)
+
+    def engine_step_for(K):
+        spec = EN.EngineSpec(n_components=C, top_k=K, floor=0.0,
+                             second_order="full", chunk=chunk)
+
+        def step(g, xs, m):
+            st = EN.stream_ubm(spec, EN.pack_ubm(g), xs, m)
+            return U.full_m_step(st.n, st.f, st.ss)
+        return jax.jit(step)
+
+    t_dense = _timeit(jax.jit(dense_full_em_step), ubm, frames)
+    t_engine = _timeit(engine_step_for(C), ubm, feats, mask)
+    t_pruned = _timeit(engine_step_for(top_k_pruned), ubm, feats, mask)
+    # analytic frame-resident floats PER FRAME, per path (unfused-XLA
+    # upper bounds; the Pallas kernels fuse the expansions in VMEM):
+    #   dense:  [F, C] posteriors + [F, D^2] expansion, F = whole dataset
+    #   engine: logliks [n, 2C] + sparse values [n, K] + x2 [n, D^2]
+    #           + weighted scatter operands [n, K(D + D^2)], n = one chunk
+    dense_pf = C + D * D
+
+    def engine_pf(K):
+        return 2 * C + K + D * D + K * (D + D * D)
+
+    chunk_frames = min(chunk if chunk > 0 else feats.shape[0],
+                       feats.shape[0]) * feats.shape[1]
+    dense_bytes = 4 * F_tot * dense_pf
+    engine_bytes = 4 * chunk_frames * engine_pf(C)
+    pruned_bytes = 4 * chunk_frames * engine_pf(top_k_pruned)
+    return {
+        "frames_total": int(F_tot),
+        "dense_step_seconds": t_dense,
+        "engine_step_seconds": t_engine,
+        "engine_pruned_step_seconds": t_pruned,
+        "engine_pruned_top_k": int(top_k_pruned),
+        "engine_chunk_frames": int(chunk_frames),
+        "dense_peak_frame_bytes": int(dense_bytes),
+        "engine_peak_frame_bytes": int(engine_bytes),
+        "engine_pruned_peak_frame_bytes": int(pruned_bytes),
+        "peak_memory_ratio_exact": dense_bytes / engine_bytes,
+        "peak_memory_ratio_pruned": dense_bytes / pruned_bytes,
+        # the structural win: dense grows with the dataset, engine with
+        # the chunk — this ratio scales linearly in dataset size
+        "frame_residency_ratio": F_tot / chunk_frames,
+        "frames_per_second_engine": F_tot / t_engine,
+    }
+
+
 def run():
     def compute():
         feats, labels, ubm = prepare(BENCH_CFG, BENCH_DATA, seed=0)
@@ -116,7 +189,11 @@ def run():
         t0 = time.time()
         naive_em_iteration(model, ubm, feats_np, cfg.posterior_top_k)
         t_naive = time.time() - t0
+
+        # 4) UBM EM: retired whole-dataset dense step vs engine streaming
+        ubm_em = ubm_em_compare(ubm, frames, cfg.posterior_top_k)
         return {
+            "ubm_em": ubm_em,
             "alignment_x_realtime": align_xrt,
             "alignment_frames_per_s": frames.shape[0] / t_align,
             "extraction_x_realtime": extract_xrt,

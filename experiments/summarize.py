@@ -1,8 +1,15 @@
-import json, glob, sys
+"""Render the experiment logs: dry-run roofline rows
+(experiments/dryrun/*.json) and multi-seed ensemble results
+(experiments/ensemble/*.json, produced by `pipeline.run_ensemble`)."""
+import glob
+import json
+
 rows = []
 for f in sorted(glob.glob("experiments/dryrun/*.json")):
     r = json.load(open(f))
     rows.append(r)
+
+
 def fmt(r):
     if r["status"] != "ok":
         return f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} {r['status']:8s} {r.get('reason', r.get('error',''))[:60]}"
@@ -11,10 +18,28 @@ def fmt(r):
             f"dom={r['dominant']:10s} rf={r['roofline_fraction']:.4f} "
             f"mem={r['peak_memory_per_device']/1e9 if r['peak_memory_per_device'] else 0:6.1f}GB "
             f"({r.get('compile_seconds','-')}s)")
+
+
 for r in rows:
-    if r["mesh"] in ("single","16x16"):
+    if r["mesh"] in ("single", "16x16"):
         print(fmt(r))
 print()
-n_ok = sum(r["status"]=="ok" for r in rows); n_skip = sum(r["status"]=="skipped" for r in rows)
-n_err = sum(r["status"]=="error" for r in rows)
+n_ok = sum(r["status"] == "ok" for r in rows)
+n_skip = sum(r["status"] == "skipped" for r in rows)
+n_err = sum(r["status"] == "error" for r in rows)
 print(f"total={len(rows)} ok={n_ok} skipped={n_skip} error={n_err}")
+
+ens = [json.load(open(f))
+       for f in sorted(glob.glob("experiments/ensemble/*.json"))]
+if ens:
+    print()
+    print("ensembles (mean ± std EER over random-start runs):")
+    for e in ens:
+        seeds = e.get("seeds", [])
+        print(f"  {e.get('name', '?'):28s} seeds={len(seeds):2d} "
+              f"final EER {100 * e['final_eer_mean']:5.2f}% "
+              f"± {100 * e['final_eer_std']:.2f}% "
+              f"(iters {e['iters'][0]}..{e['iters'][-1]})")
+        curve = " ".join(f"{100 * m:.2f}±{100 * s:.2f}"
+                         for m, s in zip(e["eer_mean"], e["eer_std"]))
+        print(f"    curve: {curve}")

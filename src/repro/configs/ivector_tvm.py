@@ -21,6 +21,12 @@ class IVectorConfig:
     min_divergence: bool = True
     update_sigma: bool = True
     realign_interval: int = 0    # 0 = never; k = realign every k EM iters
+    # what the §3.2 realignment writes back into the UBM:
+    #   'none'  - realignment disabled (write-back is a no-op)
+    #   'means' - means from the T column (the paper's step 5)
+    #   'full'  - means + weights + PSD-floored covariances refreshed from
+    #             the previous iteration's streamed sufficient statistics
+    ubm_update: str = "means"
     n_iters: int = 22            # paper: 22 iterations suffice
     # alignment (paper §4.2): top-K pruning + posterior floor + renormalise
     posterior_top_k: int = 20
@@ -31,8 +37,10 @@ class IVectorConfig:
     # psums (EXPERIMENTS.md §Perf ivector iter 1: rf 0.002 -> see table)
     utts_per_batch: int = 8192   # global; sharded over (pod, data)
     frames_per_utt: int = 1024   # fixed-size frame batches (paper Fig. 1)
-    # E-step utterance chunk: bounds the live [chunk, R, R] posterior
-    # covariances (see tvm.em_accumulate_scan); ragged tails are exact
+    # streaming utterance chunk for the fused align->stats->E-step pass
+    # (core/engine.py): bounds both the live frame-resident arrays
+    # ([chunk*F, C] posteriors) and the [chunk, R, R] posterior
+    # covariances; ragged tails are exact
     estep_chunk: int = 512
     lda_dim: int = 200
     param_dtype: str = "float32"

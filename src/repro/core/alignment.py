@@ -27,9 +27,25 @@ class SparsePosteriors(NamedTuple):
     indices: jax.Array  # [F, K] component ids
 
 
-def align_frames(x, full: U.FullGMM, diag: U.DiagGMM, *, top_k: int = 20,
-                 floor: float = 0.025, precomp=None,
-                 mask=None) -> SparsePosteriors:
+def floor_renormalise(post, floor: float) -> jax.Array:
+    """Floor + renormalise posteriors (paper: drop < 0.025, rescale to
+    sum 1). Kaldi never lets a frame vanish: if flooring would zero every
+    posterior, the arg-max component is kept (otherwise the frame silently
+    drops out of the statistics and the renormalisation divides by the
+    guard). Shared by the in-memory path and the sharded owner-local path
+    in ``launch/ivector_cell.py``.
+    """
+    keep = post >= floor
+    K = post.shape[1]
+    best = jax.nn.one_hot(jnp.argmax(post, axis=1), K, dtype=bool)
+    keep = keep | (~jnp.any(keep, axis=1, keepdims=True) & best)
+    post = jnp.where(keep, post, 0.0)
+    return post / jnp.maximum(jnp.sum(post, axis=1, keepdims=True), 1e-10)
+
+
+def align_frames(x, full, diag: U.DiagGMM, *, top_k: int = 20,
+                 floor: float = 0.025, precomp=None, mask=None,
+                 with_loglik: bool = False):
     """x: [F, D] -> sparse pruned-renormalised posteriors.
 
     Follows Kaldi/the paper: preselect with the diag UBM, score the
@@ -37,32 +53,35 @@ def align_frames(x, full: U.FullGMM, diag: U.DiagGMM, *, top_k: int = 20,
     TPU adaptation evaluates full-cov loglik for all C and masks to the
     diag-selected set (identical result, matmul-friendly).
 
+    ``full`` may be None: the selected components are then scored with the
+    diag UBM itself (the diag phase of UBM EM; with top_k == C and
+    floor == 0 this is exactly dense diag EM responsibilities).
+
     ``mask`` ([F], bool/0-1) marks valid frames; masked-out (padding)
     frames get all-zero posteriors so they contribute nothing downstream.
+
+    With ``with_loglik`` also returns the per-frame logsumexp over the
+    selected set ([F], zeroed on masked frames) — the EM diagnostic
+    loglik, exact when top_k == C.
     """
     diag_ll = U.diag_loglik(diag, x)                       # [F, C]
     _, sel = jax.lax.top_k(diag_ll, top_k)                 # [F, K]
-    full_ll = U.full_loglik(full, x, precomp=precomp)      # [F, C]
+    if full is None:
+        ll = diag_ll
+    else:
+        ll = U.full_loglik(full, x, precomp=precomp)       # [F, C]
     # gather selected lls, softmax over the selected set only
-    sel_ll = jnp.take_along_axis(full_ll, sel, axis=1)     # [F, K]
-    sel_ll = sel_ll - jax.scipy.special.logsumexp(sel_ll, axis=1,
-                                                  keepdims=True)
-    post = jnp.exp(sel_ll)
-    # floor + renormalise (paper: drop < 0.025, rescale to sum 1). Kaldi
-    # never lets a frame vanish: if flooring would zero every posterior,
-    # keep the arg-max component (otherwise the frame silently drops out
-    # of the statistics and the renormalisation divides by the guard).
-    keep = post >= floor
-    K = post.shape[1]
-    best = jax.nn.one_hot(jnp.argmax(post, axis=1), K, dtype=bool)
-    keep = keep | (~jnp.any(keep, axis=1, keepdims=True) & best)
-    post = jnp.where(keep, post, 0.0)
-    post = post / jnp.maximum(jnp.sum(post, axis=1, keepdims=True), 1e-10)
+    sel_ll = jnp.take_along_axis(ll, sel, axis=1)          # [F, K]
+    lse = jax.scipy.special.logsumexp(sel_ll, axis=1)      # [F]
+    post = floor_renormalise(jnp.exp(sel_ll - lse[:, None]), floor)
     if mask is not None:
         # where, not multiply: garbage padding frames can produce NaN/inf
         # posteriors (overflowing logliks), and NaN * 0 == NaN
-        post = jnp.where(mask.astype(bool)[:, None], post, 0.0)
-    return SparsePosteriors(post.astype(f32), sel)
+        valid = mask.astype(bool)
+        post = jnp.where(valid[:, None], post, 0.0)
+        lse = jnp.where(valid, lse, 0.0)
+    out = SparsePosteriors(post.astype(f32), sel)
+    return (out, lse.astype(f32)) if with_loglik else out
 
 
 def densify(post: SparsePosteriors, C: int) -> jax.Array:

@@ -88,8 +88,8 @@ def train_plda(x, labels) -> PLDA:
                 jnp.asarray(Sw + 1e-6 * eye, f32))
 
 
-def plda_score_matrix(plda: PLDA, enroll, test) -> jax.Array:
-    """LLR for every (enroll, test) pair under the two-covariance model:
+def _plda_coeffs(plda: PLDA):
+    """(Q, P, const) of the two-covariance LLR quadratic form:
 
     llr = log N([x;y]; 0, [[T, B],[B, T]]) - log N([x;y]; 0, [[T, 0],[0, T]])
     with T = B + W; expands to 0.5 x'Qx + 0.5 y'Qy + x'Py + const.
@@ -101,15 +101,36 @@ def plda_score_matrix(plda: PLDA, enroll, test) -> jax.Array:
     Sinv = jnp.linalg.inv(S)
     Q = Tinv - Sinv               # x'Qx coefficient
     P = Sinv @ B @ Tinv           # cross coefficient
+    _, logdet_joint = jnp.linalg.slogdet(jnp.block([[T, B], [B, T]]))
+    _, logdet_ind = jnp.linalg.slogdet(T)
+    const = -0.5 * (logdet_joint - 2.0 * logdet_ind)
+    return Q, P, const
+
+
+def plda_score_matrix(plda: PLDA, enroll, test) -> jax.Array:
+    """LLR for every (enroll, test) pair: [N_enroll, N_test]."""
+    Q, P, const = _plda_coeffs(plda)
     x = enroll - plda.mean
     y = test - plda.mean
     qx = jnp.sum((x @ Q) * x, axis=1)
     qy = jnp.sum((y @ Q) * y, axis=1)
     cross = (x @ P) @ y.T
-    _, logdet_joint = jnp.linalg.slogdet(jnp.block([[T, B], [B, T]]))
-    _, logdet_ind = jnp.linalg.slogdet(T)
-    const = -0.5 * (logdet_joint - 2.0 * logdet_ind)
     return 0.5 * (qx[:, None] + qy[None, :]) + cross + const
+
+
+def plda_score_pairs(plda: PLDA, enroll, test) -> jax.Array:
+    """LLR for N aligned (enroll[i], test[i]) trial pairs: [N].
+
+    O(N) — trial-list evaluation must not build the full N x N score
+    matrix only to read its diagonal.
+    """
+    Q, P, const = _plda_coeffs(plda)
+    x = enroll - plda.mean
+    y = test - plda.mean
+    qx = jnp.sum((x @ Q) * x, axis=1)
+    qy = jnp.sum((y @ Q) * y, axis=1)
+    cross = jnp.sum((x @ P) * y, axis=1)
+    return 0.5 * (qx + qy) + cross + const
 
 
 def eer(scores, labels) -> float:

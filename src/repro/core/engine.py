@@ -1,0 +1,248 @@
+"""StatsEngine: the single streaming align→Baum-Welch path (DESIGN.md §7).
+
+Every statistics consumer in the repo — UBM EM (`ubm.train_ubm`), TVM
+training (`trainer.train`), i-vector extraction (`trainer.extract`,
+`serving.IVectorExtractor`) — streams utterance chunks through ONE
+canonical chunk body:
+
+    chunk_body:  [u, F, D] feats (+ [u, F] mask)
+        -> flatten frames -> alignment (diag preselect, optional full-cov
+           rescoring, floor + renormalise)            [alignment.py]
+        -> scatter-add Baum-Welch moments             [stats.scatter_accumulate]
+        -> ChunkStats(n [u, C], f [u, C, D], S, loglik, frames)
+
+`stream` scans chunk_body over utterance chunks (`lax.scan` + an exact
+remainder chunk), so nothing frame-resident — `[F, C]` posteriors,
+`[F, D²]` expansions — outlives one chunk, and feeds pluggable
+accumulators.
+
+Accumulator contract (DESIGN.md §7): an accumulator is a Python object
+with three traced-pure methods —
+
+    init()                  -> zero carry (a pytree)
+    update(carry, chunk)    -> new carry   (chunk: ChunkStats)
+    finalize(carry)         -> result
+
+`update` must be associative-merge style (it runs inside `lax.scan`).
+Provided accumulators: `TotalsAccum` (global n/f/S sufficient stats +
+loglik — the UBM-EM and Σ-update consumer) and `TVMAccum` (the TVM
+E-step, merging `tvm.EMAccum` per chunk). Per-utterance n/f for
+extraction are collected as scan outputs (`collect_nf=True`), not as a
+reduction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alignment as AL
+from repro.core import stats as ST
+from repro.core import tvm as TV
+from repro.core import ubm as U
+
+f32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """Static (hashable) description of one align→stats configuration."""
+    n_components: int
+    top_k: int
+    floor: float
+    second_order: Optional[str] = None   # None | 'diag' | 'full'
+    chunk: int = 0                       # utterances per scan chunk; 0 = all
+
+
+class UBMPack(NamedTuple):
+    """The per-model precompute the chunk body scores against (built once
+    per pass/session, passed as a jit argument so device buffers are
+    shared across compiled shapes)."""
+    full: Optional[U.FullGMM]     # None => diag-only scoring (UBM diag EM)
+    diag: U.DiagGMM               # preselection (and diag-phase) GMM
+    pre: Optional[Tuple]          # full_precisions(full)
+
+
+def pack_ubm(ubm: U.FullGMM) -> UBMPack:
+    return UBMPack(ubm, ubm.to_diag(), U.full_precisions(ubm))
+
+
+def pack_diag(gmm: U.DiagGMM) -> UBMPack:
+    return UBMPack(None, gmm, None)
+
+
+class ChunkStats(NamedTuple):
+    n: jax.Array                  # [u, C] per-utterance occupancies
+    f: jax.Array                  # [u, C, D] per-utterance first order
+    S: Optional[jax.Array]        # [C, D] | [C, D*D] chunk-summed | None
+    loglik: jax.Array             # [] Σ valid-frame logsumexp (selected set)
+    frames: jax.Array             # [] number of valid frames
+
+
+class UBMStats(NamedTuple):
+    """Finalized global sufficient statistics (TotalsAccum output)."""
+    n: jax.Array                  # [C]
+    f: jax.Array                  # [C, D]
+    ss: Optional[jax.Array]       # [C, D] | [C, D, D] | None
+    loglik: jax.Array             # []
+    frames: jax.Array             # []
+
+
+def chunk_body(spec: EngineSpec, pack: UBMPack, feats_c,
+               mask_c=None) -> ChunkStats:
+    """THE canonical align→BW-stats body for one utterance chunk.
+
+    feats_c: [u, F, D]; mask_c: [u, F] optional. Frames are flattened so
+    alignment is one matmul; the scatter groups statistics back by
+    utterance. Nothing here retains a frame-resident array beyond the
+    chunk.
+    """
+    u, F, D = feats_c.shape
+    x = feats_c.reshape(u * F, D)
+    m = None if mask_c is None else mask_c.reshape(u * F)
+    post, lse = AL.align_frames(
+        x, pack.full, pack.diag, top_k=spec.top_k, floor=spec.floor,
+        precomp=pack.pre, mask=m, with_loglik=True)
+    n, f, S = ST.scatter_accumulate(
+        x, post.values, post.indices, jnp.repeat(jnp.arange(u), F), u,
+        spec.n_components, second_order=spec.second_order, mask=m)
+    frames = (jnp.asarray(u * F, f32) if m is None
+              else jnp.sum(m.astype(f32)))
+    return ChunkStats(n, f, S, jnp.sum(lse), frames)
+
+
+# ---------------------------------------------------------------------------
+# Accumulators
+# ---------------------------------------------------------------------------
+
+
+class TotalsAccum:
+    """Global sufficient statistics: Σ_u n, Σ_u f, Σ S, loglik, frames.
+
+    Feeds the UBM M-steps (`ubm.diag_m_step`/`full_m_step`), the TVM
+    Σ-update, and the full UBM refresh at realignment.
+    """
+
+    def __init__(self, spec: EngineSpec, feat_dim: int):
+        self.spec = spec
+        self.D = feat_dim
+
+    def init(self):
+        C, D = self.spec.n_components, self.D
+        S0 = None
+        if self.spec.second_order == "diag":
+            S0 = jnp.zeros((C, D), f32)
+        elif self.spec.second_order == "full":
+            S0 = jnp.zeros((C, D * D), f32)
+        return (jnp.zeros((C,), f32), jnp.zeros((C, D), f32), S0,
+                jnp.zeros((), f32), jnp.zeros((), f32))
+
+    def update(self, carry, chunk: ChunkStats):
+        n, f, S, ll, fr = carry
+        if chunk.S is not None:
+            S = S + chunk.S
+        return (n + jnp.sum(chunk.n, axis=0), f + jnp.sum(chunk.f, axis=0),
+                S, ll + chunk.loglik, fr + chunk.frames)
+
+    def finalize(self, carry) -> UBMStats:
+        n, f, S, ll, fr = carry
+        if self.spec.second_order == "full":
+            C, D = self.spec.n_components, self.D
+            S = S.reshape(C, D, D)
+        return UBMStats(n, f, S, ll, fr)
+
+
+class TVMAccum:
+    """TVM E-step accumulator: per-chunk (n, f) -> merged `tvm.EMAccum`.
+
+    ``center_means`` (standard formulation) centres each chunk's
+    first-order stats around the UBM means before the posterior solve.
+    """
+
+    def __init__(self, model: TV.TVModel, pre: TV.Precomp,
+                 center_means=None):
+        self.model = model
+        self.pre = pre
+        self.center_means = center_means
+
+    def init(self):
+        C, D, R = self.model.T.shape
+        return TV.EMAccum.zeros(C, D, R)
+
+    def update(self, carry, chunk: ChunkStats):
+        n, f = chunk.n, chunk.f
+        if self.center_means is not None:
+            st = ST.center(ST.BWStats(n, f, None), self.center_means)
+            n, f = st.n, st.f
+        return TV.merge_accums(
+            carry, TV.em_accumulate(self.model, self.pre, n, f))
+
+    def finalize(self, carry) -> TV.EMAccum:
+        return carry
+
+
+# ---------------------------------------------------------------------------
+# Streaming
+# ---------------------------------------------------------------------------
+
+
+def stream(spec: EngineSpec, pack: UBMPack, feats, mask,
+           accums: Sequence, collect_nf: bool = False):
+    """Scan `chunk_body` over utterance chunks, feeding ``accums``.
+
+    feats: [U, F, D]; mask: [U, F] or None. Returns
+    (tuple of finalized accumulator results,
+     (n [U, C], f [U, C, D]) if ``collect_nf`` else None).
+
+    A ragged tail (U % chunk != 0) runs as one exact remainder chunk, so
+    arbitrary batch sizes keep the bounded per-chunk footprint.
+    """
+    n_utts, F, D = feats.shape
+    chunk = n_utts if spec.chunk <= 0 else min(spec.chunk, n_utts)
+    g, rem = divmod(n_utts, chunk)
+    carries = tuple(a.init() for a in accums)
+
+    def body(carries, inp):
+        feats_c, mask_c = inp
+        cs = chunk_body(spec, pack, feats_c, mask_c)
+        new = tuple(a.update(c, cs) for a, c in zip(accums, carries))
+        return new, ((cs.n, cs.f) if collect_nf else None)
+
+    C = spec.n_components
+    ns = fs = None
+    if g:
+        fr = feats[:g * chunk].reshape(g, chunk, F, D)
+        mr = (None if mask is None
+              else mask[:g * chunk].reshape(g, chunk, F))
+        carries, ys = jax.lax.scan(body, carries, (fr, mr))
+        if collect_nf:
+            ns = ys[0].reshape(g * chunk, C)
+            fs = ys[1].reshape(g * chunk, C, D)
+    if rem:
+        tail_m = None if mask is None else mask[g * chunk:]
+        carries, ys_t = body(carries, (feats[g * chunk:], tail_m))
+        if collect_nf:
+            ns = ys_t[0] if ns is None else jnp.concatenate([ns, ys_t[0]])
+            fs = ys_t[1] if fs is None else jnp.concatenate([fs, ys_t[1]])
+    results = tuple(a.finalize(c) for a, c in zip(accums, carries))
+    return results, ((ns, fs) if collect_nf else None)
+
+
+def stream_bw(spec: EngineSpec, pack: UBMPack, feats, mask=None):
+    """Streamed Baum-Welch stats with per-utterance n/f (extraction and
+    the TVM stats path): -> (BWStats, (loglik, frames))."""
+    (tot,), nf = stream(spec, pack, feats, mask,
+                        (TotalsAccum(spec, feats.shape[-1]),),
+                        collect_nf=True)
+    return ST.BWStats(nf[0], nf[1], tot.ss), (tot.loglik, tot.frames)
+
+
+def stream_ubm(spec: EngineSpec, pack: UBMPack, feats,
+               mask=None) -> UBMStats:
+    """Streamed global sufficient statistics (UBM EM): no per-utterance
+    arrays are retained at all."""
+    (tot,), _ = stream(spec, pack, feats, mask,
+                       (TotalsAccum(spec, feats.shape[-1]),))
+    return tot

@@ -1,9 +1,16 @@
 """End-to-end speaker-verification evaluation (paper §4.1 chain):
 features -> UBM -> TVM training (variant-switchable) -> i-vectors ->
-centre (-> whiten if no min-div) -> length-norm -> LDA -> PLDA -> EER."""
+centre (-> whiten if no min-div) -> length-norm -> LDA -> PLDA -> EER.
+
+`run_ensemble` implements the paper's measurement protocol: every
+reported number is the ensemble average over multiple training runs with
+random starts (per-seed EER curves, mean ± std aggregation);
+`experiments/summarize.py` renders the dumped json."""
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,9 +43,10 @@ def evaluate_state(cfg: IVectorConfig, state: TR.TrainState, feats,
     plda = BK.train_plda(jnp.asarray(xl), labels)
     rng = np.random.default_rng(seed)
     a, b, y = make_trials(labels, np.arange(len(labels)), rng)
-    scores = np.asarray(BK.plda_score_matrix(
+    # score only the trial pairs (O(N)), not the full N x N matrix
+    scores = np.asarray(BK.plda_score_pairs(
         plda, jnp.asarray(xl[a]), jnp.asarray(xl[b])))
-    return BK.eer(np.diagonal(scores), y)
+    return BK.eer(scores, y)
 
 
 def prepare(cfg: IVectorConfig, data_cfg: SpeechDataConfig, seed: int = 0):
@@ -69,3 +77,41 @@ def run_experiment(cfg: IVectorConfig, data_cfg: SpeechDataConfig,
                    seed: int = 0) -> Dict:
     feats, labels, ubm = prepare(cfg, data_cfg, seed)
     return run_variant(cfg, feats, labels, ubm, n_iters, eval_every, seed)
+
+
+def run_ensemble(cfg: IVectorConfig, data_cfg: Optional[SpeechDataConfig],
+                 seeds: Sequence[int], n_iters: int, eval_every: int = 1,
+                 name: str = "ensemble", out_dir=None,
+                 feats=None, labels=None, ubm=None) -> Dict:
+    """The paper's multi-run random-start protocol: train one extractor
+    per seed (fresh random T init + fresh trial draw; shared data + UBM),
+    collect the per-seed EER curves, and report mean ± std per iteration.
+
+    Pass either ``data_cfg`` (dataset + UBM built via `prepare`) or
+    prebuilt ``feats``/``labels``/``ubm``. With ``out_dir`` the result is
+    dumped as json for `experiments/summarize.py`.
+    """
+    if feats is None:
+        feats, labels, ubm = prepare(cfg, data_cfg, seed=int(seeds[0]))
+    curves: Dict[str, List] = {}
+    for s in seeds:
+        r = run_variant(cfg, feats, labels, ubm, n_iters,
+                        eval_every=eval_every, seed=int(s))
+        curves[str(int(s))] = [(int(it), float(e)) for it, e in r["curve"]]
+    iters = [it for it, _ in next(iter(curves.values()))]
+    eers = np.asarray([[e for _, e in curves[str(int(s))]] for s in seeds])
+    result = {
+        "name": name,
+        "seeds": [int(s) for s in seeds],
+        "iters": iters,
+        "curves": curves,
+        "eer_mean": eers.mean(axis=0).tolist(),
+        "eer_std": eers.std(axis=0).tolist(),
+        "final_eer_mean": float(eers[:, -1].mean()),
+        "final_eer_std": float(eers[:, -1].std()),
+    }
+    if out_dir is not None:
+        out_dir = Path(out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{name}.json").write_text(json.dumps(result, indent=2))
+    return result

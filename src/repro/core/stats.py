@@ -27,6 +27,45 @@ class BWStats(NamedTuple):
     S: Optional[jax.Array] = None  # [C, D, D] (summed over utts; Σ update)
 
 
+def scatter_accumulate(x, values, indices, utt_ids, n_utts: int, C: int,
+                       second_order: Optional[str] = None, mask=None):
+    """THE Baum-Welch scatter-add: flat frames -> (n, f, S).
+
+    Every accumulation path in the repo (in-memory batches via
+    ``accumulate_batch``, the streaming engine chunk body, the owner-local
+    shards in ``launch/ivector_cell.py``) bottoms out here.
+
+    x: [N, D] frames (any utterance structure, flattened);
+    values/indices: [N, K] sparse posteriors; utt_ids: [N] utterance id per
+    frame; mask: [N] optional validity. ``second_order``: None | 'diag' |
+    'full' selects S as absent, [C, D] (sum gamma x^2) or [C, D*D]
+    (sum gamma vec(x x^T), row-major).
+    """
+    N, D = x.shape
+    K = values.shape[1]
+    if mask is not None:
+        # where, not multiply: NaN/inf in garbage padding frames must not
+        # survive masking (NaN * 0 == NaN)
+        valid = mask.astype(bool)[:, None]
+        values = jnp.where(valid, values, 0.0)
+        x = jnp.where(valid, x, 0.0)
+    rows_u = jnp.repeat(utt_ids, K)            # [N*K]
+    rows_c = indices.reshape(-1)               # [N*K]
+    n = jnp.zeros((n_utts, C), f32).at[rows_u, rows_c].add(
+        values.reshape(-1))
+    xw = (values[:, :, None] * x[:, None, :]).reshape(N * K, D)
+    f = jnp.zeros((n_utts, C, D), f32).at[rows_u, rows_c].add(xw)
+    S = None
+    if second_order == "diag":
+        sw = (values[:, :, None] * (x * x)[:, None, :]).reshape(N * K, D)
+        S = jnp.zeros((C, D), f32).at[rows_c].add(sw)
+    elif second_order == "full":
+        x2 = (x[:, :, None] * x[:, None, :]).reshape(N, D * D)
+        x2w = (values[:, :, None] * x2[:, None, :]).reshape(N * K, D * D)
+        S = jnp.zeros((C, D * D), f32).at[rows_c].add(x2w)
+    return n, f, S
+
+
 def accumulate(x, post: SparsePosteriors, C: int,
                second_order: bool = False, mask=None) -> BWStats:
     """x: [F, D] single utterance -> per-utterance stats (U dim absent).
@@ -36,25 +75,10 @@ def accumulate(x, post: SparsePosteriors, C: int,
     arbitrary garbage in padding frames cannot pollute the statistics).
     """
     F, D = x.shape
-    K = post.values.shape[1]
-    values = post.values
-    if mask is not None:
-        # where, not multiply: NaN/inf in garbage padding frames must not
-        # survive masking (NaN * 0 == NaN)
-        valid = mask.astype(bool)[:, None]
-        values = jnp.where(valid, values, 0.0)
-        x = jnp.where(valid, x, 0.0)
-    rows = post.indices.reshape(-1)            # [F*K]
-    vals = values.reshape(-1)                  # [F*K]
-    n = jnp.zeros((C,), f32).at[rows].add(vals)
-    xw = (values[:, :, None] * x[:, None, :]).reshape(F * K, D)
-    f = jnp.zeros((C, D), f32).at[rows].add(xw)
-    S = None
-    if second_order:
-        x2 = (x[:, :, None] * x[:, None, :]).reshape(F, D * D)
-        x2w = (values[:, :, None] * x2[:, None, :]).reshape(F * K, D * D)
-        S = jnp.zeros((C, D * D), f32).at[rows].add(x2w).reshape(C, D, D)
-    return BWStats(n, f, S)
+    n, f, S = scatter_accumulate(
+        x, post.values, post.indices, jnp.zeros((F,), jnp.int32), 1, C,
+        second_order="full" if second_order else None, mask=mask)
+    return BWStats(n[0], f[0], S.reshape(C, D, D) if second_order else None)
 
 
 def accumulate_batch(xs, posts: SparsePosteriors, C: int,
@@ -65,13 +89,14 @@ def accumulate_batch(xs, posts: SparsePosteriors, C: int,
     S is summed over utterances (only its total enters the Σ update).
     ``mask`` ([U, F]) marks valid frames per utterance.
     """
-    # mask=None rides through vmap as an empty pytree (in_axes=None)
-    fn = jax.vmap(lambda x, v, i, m: accumulate(
-        x, SparsePosteriors(v, i), C, second_order, mask=m),
-        in_axes=(0, 0, 0, None if mask is None else 0))
-    st = fn(xs, posts.values, posts.indices, mask)
-    S = jnp.sum(st.S, axis=0) if second_order else None
-    return BWStats(st.n, st.f, S)
+    U, F, D = xs.shape
+    K = posts.values.shape[-1]
+    n, f, S = scatter_accumulate(
+        xs.reshape(U * F, D), posts.values.reshape(U * F, K),
+        posts.indices.reshape(U * F, K), jnp.repeat(jnp.arange(U), F), U, C,
+        second_order="full" if second_order else None,
+        mask=None if mask is None else mask.reshape(U * F))
+    return BWStats(n, f, S.reshape(C, D, D) if second_order else None)
 
 
 def center(stats: BWStats, means) -> BWStats:

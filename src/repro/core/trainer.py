@@ -2,23 +2,33 @@
 with every Fig.-2/3 variant switchable:
 
   formulation   'standard' | 'augmented'
-  min_divergence / update_sigma / realign_interval
+  min_divergence / update_sigma / realign_interval / ubm_update
 
-One EM iteration = (realign if due) -> E-step over utterance minibatches ->
-M-step -> min-divergence -> UBM-mean write-back. Batched over utterances so
-the same code runs CPU-small and pod-scale (utterances shard over 'data',
-components over 'model'; see launch/ivector_cell.py for the mesh lowering).
+One EM iteration is ONE streamed pass through the StatsEngine
+(core/engine.py): utterance chunks scan through alignment -> Baum-Welch
+stats -> TVM E-step accumulation, so nothing frame-resident outlives a
+chunk, then M-step + min-divergence. Because alignment is re-derived from
+the UBM every pass (the paper's GPU-speed premise), realignment is just a
+UBM write-back between iterations — `ubm_update` selects how much of the
+UBM it refreshes ('means' = the paper's step 5; 'full' also refreshes
+weights and covariances from the same streamed statistics).
+
+Long runs checkpoint through `checkpoint/manager.py` (``ckpt_dir``):
+model + UBM + last-pass sufficient stats are saved every
+``ckpt_interval`` iterations and restored transparently on restart.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import manager as CM
 from repro.configs.ivector_tvm import IVectorConfig
-from repro.core import alignment as AL
+from repro.core import engine as EN
 from repro.core import stats as ST
 from repro.core import tvm as TV
 from repro.core import ubm as U
@@ -33,25 +43,21 @@ class TrainState:
     iteration: int = 0
 
 
+def _spec(cfg: IVectorConfig, second_order: bool) -> EN.EngineSpec:
+    return EN.EngineSpec(
+        n_components=cfg.n_components, top_k=cfg.posterior_top_k,
+        floor=cfg.posterior_floor,
+        second_order="full" if second_order else None,
+        chunk=cfg.estep_chunk)
+
+
 def _align_and_stats(cfg: IVectorConfig, ubm: U.FullGMM, feats,
-                     second_order: bool, mask=None):
-    """feats: [U, F, D] -> BWStats (n [U,C], f [U,C,D], S [C,D,D]|None).
-
-    ``mask`` ([U, F], optional) marks valid frames; padding frames are
-    excluded from both the posteriors and the accumulated statistics.
-    """
-    diag = ubm.to_diag()
-    pre = U.full_precisions(ubm)
-    # mask=None rides through vmap as an empty pytree (in_axes=None)
-    post = jax.vmap(lambda x, m: AL.align_frames(
-        x, ubm, diag, top_k=cfg.posterior_top_k,
-        floor=cfg.posterior_floor, precomp=pre, mask=m),
-        in_axes=(0, None if mask is None else 0))(feats, mask)
-    return ST.accumulate_batch(feats, post, cfg.n_components,
-                               second_order=second_order, mask=mask)
-
-
-import functools
+                     second_order: bool, mask=None) -> ST.BWStats:
+    """feats: [U, F, D] -> BWStats (n [U,C], f [U,C,D], S [C,D,D]|None)
+    via the engine's streamed chunk body. ``mask`` ([U, F], optional)
+    marks valid frames; padding contributes exactly nothing."""
+    return EN.stream_bw(_spec(cfg, second_order), EN.pack_ubm(ubm),
+                        feats, mask)[0]
 
 
 @functools.lru_cache(maxsize=64)
@@ -61,8 +67,18 @@ def make_stats_fn(cfg: IVectorConfig):
 
 
 @functools.lru_cache(maxsize=64)
+def make_stats_ll_fn(cfg: IVectorConfig):
+    """Like make_stats_fn but also returns the (loglik, frames) aux."""
+    spec = _spec(cfg, cfg.update_sigma)
+    return jax.jit(lambda ubm, feats, mask=None: EN.stream_bw(
+        spec, EN.pack_ubm(ubm), feats, mask))
+
+
+@functools.lru_cache(maxsize=64)
 def make_em_fn(cfg: IVectorConfig):
-    """(model, stats) -> (new_model, diagnostics); one full EM iteration."""
+    """(model, stats) -> (new_model, diagnostics); one EM iteration from
+    precomputed Baum-Welch statistics (benchmarks and stats-at-rest use;
+    the training loop streams stats and E-step fused — make_iter_fn)."""
 
     def em_iter(model: TV.TVModel, n, f, S_tot):
         if model.formulation == "standard":
@@ -82,32 +98,167 @@ def make_em_fn(cfg: IVectorConfig):
     return jax.jit(em_iter)
 
 
+@functools.lru_cache(maxsize=64)
+def make_iter_fn(cfg: IVectorConfig):
+    """(model, ubm, feats, mask) -> (new_model, totals, diagnostics).
+
+    One fused streamed EM iteration: the engine scans utterance chunks
+    through the canonical chunk body feeding TWO accumulators — global
+    sufficient stats (TotalsAccum: the Σ-update and the UBM refresh) and
+    the TVM E-step (TVMAccum) — then M-step + min-divergence. ``totals``
+    (engine.UBMStats) is what `refresh_ubm` consumes at realignment.
+    """
+    track_S = cfg.update_sigma or cfg.ubm_update == "full"
+    spec = _spec(cfg, track_S)
+
+    def iter_fn(model: TV.TVModel, ubm: U.FullGMM, feats, mask=None):
+        pack = EN.pack_ubm(ubm)
+        pre = TV.precompute(model)
+        center = model.means if model.formulation == "standard" else None
+        accums = (EN.TotalsAccum(spec, feats.shape[-1]),
+                  EN.TVMAccum(model, pre, center_means=center))
+        (tot, acc), _ = EN.stream(spec, pack, feats, mask, accums)
+        S_m = None
+        if cfg.update_sigma:
+            S_m = tot.ss
+            if center is not None:
+                S_m = ST.center(ST.BWStats(tot.n[None], tot.f[None],
+                                           tot.ss), model.means).S
+        model = TV.m_step(model, acc, S_m, cfg.update_sigma)
+        if cfg.min_divergence:
+            model = TV.min_divergence(model, acc)
+        diag = {"mean_phi_norm": jnp.linalg.norm(acc.h / acc.n_utts),
+                "avg_loglik": tot.loglik / jnp.maximum(tot.frames, 1.0)}
+        return model, tot, diag
+
+    return jax.jit(iter_fn)
+
+
+# ---------------------------------------------------------------------------
+# Realignment write-back (§3.2 step 5, generalized)
+# ---------------------------------------------------------------------------
+
+
+def refresh_ubm(cfg: IVectorConfig, model: TV.TVModel, ubm: U.FullGMM,
+                totals: Optional[EN.UBMStats], *,
+                update_weights: Optional[bool] = None,
+                update_covs: Optional[bool] = None) -> U.FullGMM:
+    """UBM write-back for realignment. 'means' rewrites only the means
+    from the T column; 'full' additionally refreshes the weights and the
+    (PSD-floored) covariances from the previous iteration's streamed
+    sufficient statistics. With both refresh flags disabled, 'full'
+    degenerates to exactly the 'means' behaviour.
+    """
+    full = cfg.ubm_update == "full"
+    update_weights = full if update_weights is None else update_weights
+    update_covs = full if update_covs is None else update_covs
+    means = TV.updated_ubm_means(model)
+    weights, covs = ubm.weights, ubm.covs
+    if update_weights:
+        weights = U.renormalised_weights(totals.n)
+    if update_covs:
+        n_safe = jnp.maximum(totals.n, 1e-6)
+        fbar = totals.f / n_safe[:, None]
+        covs = (totals.ss / n_safe[:, None, None]
+                - means[:, :, None] * fbar[:, None, :]
+                - fbar[:, :, None] * means[:, None, :]
+                + means[:, :, None] * means[:, None, :])
+        covs = U.psd_floor(covs)
+    return U.FullGMM(weights, means, covs)
+
+
+def _realign_due(cfg: IVectorConfig, it: int, model: TV.TVModel) -> bool:
+    return (cfg.realign_interval > 0 and it > 0
+            and it % cfg.realign_interval == 0
+            and model.formulation == "augmented"
+            and cfg.ubm_update != "none")
+
+
+# ---------------------------------------------------------------------------
+# Training loop + extraction
+# ---------------------------------------------------------------------------
+
+
+def _ckpt_tree(state: TrainState, totals: Optional[EN.UBMStats]):
+    """Fixed-structure checkpoint pytree (placeholder zeros keep the
+    manifest stable whether or not second-order stats are tracked)."""
+    C, D = state.ubm.means.shape
+    n = jnp.zeros((C,), f32)
+    f = jnp.zeros((C, D), f32)
+    ss = jnp.zeros((C, D, D), f32)
+    if totals is not None:
+        n, f = totals.n, totals.f
+        if totals.ss is not None:
+            ss = totals.ss
+    return {"model": state.model, "ubm": state.ubm,
+            "n": n, "f": f, "ss": ss}
+
+
 def train(cfg: IVectorConfig, ubm: U.FullGMM, feats,
-          n_iters: Optional[int] = None, key=None,
-          callback=None) -> TrainState:
-    """Full training loop on in-memory features [U, F, D]."""
+          n_iters: Optional[int] = None, key=None, callback=None,
+          mask=None, ckpt_dir=None, ckpt_interval: int = 1,
+          ckpt_keep: int = 3) -> TrainState:
+    """Full training loop on in-memory features [U, F, D].
+
+    ``mask`` ([U, F], optional) marks valid frames (ragged batches train
+    exactly). With ``ckpt_dir`` the loop saves model + UBM + last-pass
+    stats every ``ckpt_interval`` iterations and transparently resumes
+    from the latest checkpoint on restart (bit-identical trajectory).
+    """
     key = key if key is not None else jax.random.PRNGKey(0)
     model = TV.init_model(key, ubm.means, ubm.covs, cfg.ivector_dim,
                           cfg.formulation, cfg.prior_offset)
     state = TrainState(model=model, ubm=ubm)
-    stats_fn = make_stats_fn(cfg)
-    em_fn = make_em_fn(cfg)
     n_iters = n_iters or cfg.n_iters
 
-    st = stats_fn(state.ubm, feats)
-    for it in range(n_iters):
-        realign = (cfg.realign_interval > 0 and it > 0
-                   and it % cfg.realign_interval == 0
-                   and state.model.formulation == "augmented")
-        if realign:
-            new_means = TV.updated_ubm_means(state.model)
-            state.ubm = U.FullGMM(state.ubm.weights, new_means,
-                                  state.ubm.covs)
-            st = stats_fn(state.ubm, feats)
+    prev: Optional[EN.UBMStats] = None
+    start = 0
+    mgr = None
+    if ckpt_dir is not None:
+        mgr = CM.CheckpointManager(ckpt_dir, save_interval=ckpt_interval,
+                                   keep=ckpt_keep)
+        if mgr.has_checkpoint():
+            tree, step, _ = mgr.restore_latest(_ckpt_tree(state, None))
+            state.model = tree["model"]
+            state.ubm = tree["ubm"]
+            prev = EN.UBMStats(tree["n"], tree["f"], tree["ss"],
+                               jnp.zeros((), f32), jnp.zeros((), f32))
+            start = min(int(step), n_iters)
+            state.iteration = start
+
+    # When realignment can never fire the UBM is static, so alignment is
+    # computed ONCE and the Baum-Welch stats are reused across EM
+    # iterations; the fused per-iteration streaming pass only runs when a
+    # write-back can actually change the alignments.
+    realign_possible = (cfg.realign_interval > 0
+                        and cfg.ubm_update != "none"
+                        and cfg.formulation == "augmented")
+    if realign_possible:
+        iter_fn = make_iter_fn(cfg)
+        for it in range(start, n_iters):
+            if _realign_due(cfg, it, state.model):
+                state.ubm = refresh_ubm(cfg, state.model, state.ubm, prev)
+            state.model, prev, diag = iter_fn(state.model, state.ubm,
+                                              feats, mask)
+            state.iteration = it + 1
+            if mgr is not None:
+                mgr.maybe_save(state.iteration, _ckpt_tree(state, prev),
+                               extra={"iteration": state.iteration})
+            if callback is not None:
+                callback(state, diag)
+        return state
+
+    st, (ll, frames) = make_stats_ll_fn(cfg)(state.ubm, feats, mask)
+    avg_ll = ll / jnp.maximum(frames, 1.0)
+    em_fn = make_em_fn(cfg)
+    for it in range(start, n_iters):
         state.model, diag = em_fn(state.model, st.n, st.f, st.S)
         state.iteration = it + 1
+        if mgr is not None:
+            mgr.maybe_save(state.iteration, _ckpt_tree(state, None),
+                           extra={"iteration": state.iteration})
         if callback is not None:
-            callback(state, diag)
+            callback(state, {**diag, "avg_loglik": avg_ll})
     return state
 
 

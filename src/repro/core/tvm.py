@@ -98,6 +98,14 @@ class EMAccum(NamedTuple):
     n_tot: jax.Array    # [C]
     n_utts: jax.Array   # []
 
+    @staticmethod
+    def zeros(C: int, D: int, R: int) -> "EMAccum":
+        """Identity element of ``merge_accums`` (scan/stream carries)."""
+        return EMAccum(
+            A=jnp.zeros((C, R, R), f32), B=jnp.zeros((C, D, R), f32),
+            h=jnp.zeros((R,), f32), H=jnp.zeros((R, R), f32),
+            n_tot=jnp.zeros((C,), f32), n_utts=jnp.zeros((), f32))
+
 
 def em_accumulate(model: TVModel, pre: Precomp, n, f) -> EMAccum:
     """One minibatch of utterance stats -> E-step accumulators."""
@@ -135,9 +143,7 @@ def em_accumulate_scan(model: TVModel, pre: Precomp, n, f,
         acc = em_accumulate(model, pre, nc, fc)
         return merge_accums(carry, acc), None
 
-    zero = EMAccum(A=jnp.zeros((C, R, R), f32), B=jnp.zeros((C, D, R), f32),
-                   h=jnp.zeros((R,), f32), H=jnp.zeros((R, R), f32),
-                   n_tot=jnp.zeros((C,), f32), n_utts=jnp.zeros((), f32))
+    zero = EMAccum.zeros(C, D, R)
     nr = n[:g * chunk].reshape(g, chunk, C)
     fr = f[:g * chunk].reshape(g, chunk, C, D)
     acc, _ = jax.lax.scan(body, zero, (nr, fr))

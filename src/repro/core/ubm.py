@@ -53,18 +53,28 @@ class FullGMM:
 # ---------------------------------------------------------------------------
 
 
-def diag_loglik(gmm: DiagGMM, x) -> jax.Array:
-    """x: [F, D] -> [F, C] per-component log-likelihood (+ log weight)."""
+def diag_coeffs(gmm: DiagGMM) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(const [C], lin [D, C], quad [D, C]) natural parameters of the diag
+    log-likelihood — the single source of this coefficient math (the
+    sharded path in ``launch/ivector_cell.py`` shards these over 'model')."""
     inv = 1.0 / gmm.vars
     const = (-0.5 * (jnp.sum(jnp.log(gmm.vars), axis=1)
                      + gmm.means.shape[1] * _LOG2PI
                      + jnp.sum(gmm.means ** 2 * inv, axis=1))
              + jnp.log(gmm.weights))
-    lin = (gmm.means * inv).T          # [D, C]
-    quad = (-0.5 * inv).T              # [D, C]
-    return (const[None]
-            + x @ lin
-            + (x * x) @ quad).astype(f32)
+    return (const.astype(f32), (gmm.means * inv).T.astype(f32),
+            (-0.5 * inv).T.astype(f32))
+
+
+def diag_loglik_from_coeffs(x, const, lin, quad) -> jax.Array:
+    """x: [F, D] with ``diag_coeffs`` output (possibly a component shard)
+    -> [F, C] per-component log-likelihood (+ log weight)."""
+    return (const[None] + x @ lin + (x * x) @ quad).astype(f32)
+
+
+def diag_loglik(gmm: DiagGMM, x) -> jax.Array:
+    """x: [F, D] -> [F, C] per-component log-likelihood (+ log weight)."""
+    return diag_loglik_from_coeffs(x, *diag_coeffs(gmm))
 
 
 def full_precisions(gmm: FullGMM) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -90,34 +100,70 @@ def full_loglik(gmm: FullGMM, x, precomp=None) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# EM training
+# EM training (E-side streamed through core/engine.py; M-steps here)
 # ---------------------------------------------------------------------------
 
 VAR_FLOOR = 1e-3
+WEIGHT_FLOOR = 1e-8
 
 
-def init_diag_from_data(x, C: int, key) -> DiagGMM:
-    """Random-frame means, global variance init."""
-    F = x.shape[0]
-    idx = jax.random.choice(key, F, (C,), replace=False)
-    gvar = jnp.var(x, axis=0) + VAR_FLOOR
-    return DiagGMM(jnp.full((C,), 1.0 / C, f32), x[idx].astype(f32),
-                   jnp.broadcast_to(gvar, (C, x.shape[1])).astype(f32))
+def init_diag_from_data(x, C: int, key, mask=None) -> DiagGMM:
+    """Random-frame means, global variance init.
+
+    ``x`` may be flat [F, D] or batched [U, F, D]; with ``mask`` the means
+    are drawn from (and the variance computed over) valid frames only.
+    """
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    if mask is None:
+        idx = jax.random.choice(key, xf.shape[0], (C,), replace=False)
+        gvar = jnp.var(xf, axis=0) + VAR_FLOOR
+    else:
+        m = mask.reshape(-1).astype(f32)
+        tot = jnp.maximum(jnp.sum(m), 1.0)
+        xm = jnp.where(m[:, None] > 0, xf, 0.0)
+        mean = jnp.sum(xm, axis=0) / tot
+        gvar = jnp.sum(xm * xm, axis=0) / tot - mean ** 2 + VAR_FLOOR
+        idx = jax.random.choice(key, xf.shape[0], (C,), replace=False,
+                                p=m / jnp.sum(m))
+    return DiagGMM(jnp.full((C,), 1.0 / C, f32), xf[idx].astype(f32),
+                   jnp.broadcast_to(gvar, (C, D)).astype(f32))
 
 
-def diag_em_step(gmm: DiagGMM, x) -> Tuple[DiagGMM, jax.Array]:
-    ll = diag_loglik(gmm, x)
-    logpost = ll - jax.scipy.special.logsumexp(ll, axis=1, keepdims=True)
-    post = jnp.exp(logpost)                      # [F, C]
-    n = jnp.sum(post, axis=0)                    # [C]
-    fsum = post.T @ x                            # [C, D]
-    ssum = post.T @ (x * x)                      # [C, D]
+def renormalised_weights(n) -> jax.Array:
+    """Occupancies -> mixture weights: normalise, floor, renormalise.
+    Flooring alone leaves the weights summing to > 1 (every floored
+    component adds mass); the second normalisation restores sum == 1."""
+    w = jnp.maximum(n / jnp.maximum(jnp.sum(n), 1e-10), WEIGHT_FLOOR)
+    return w / jnp.sum(w)
+
+
+def diag_m_step(n, f, ss) -> DiagGMM:
+    """M-step from streamed sufficient stats (n [C], f [C, D], ss [C, D])."""
     n_safe = jnp.maximum(n, 1e-6)
-    means = fsum / n_safe[:, None]
-    vars_ = jnp.maximum(ssum / n_safe[:, None] - means ** 2, VAR_FLOOR)
-    weights = jnp.maximum(n / jnp.sum(n), 1e-8)
-    avg_ll = jnp.mean(jax.scipy.special.logsumexp(ll, axis=1))
-    return DiagGMM(weights, means, vars_), avg_ll
+    means = f / n_safe[:, None]
+    vars_ = jnp.maximum(ss / n_safe[:, None] - means ** 2, VAR_FLOOR)
+    return DiagGMM(renormalised_weights(n), means, vars_)
+
+
+def full_m_step(n, f, ss) -> FullGMM:
+    """M-step from streamed sufficient stats (ss [C, D, D])."""
+    n_safe = jnp.maximum(n, 1e-6)
+    means = f / n_safe[:, None]
+    covs = (ss / n_safe[:, None, None]
+            - means[:, :, None] * means[:, None, :])
+    D = covs.shape[1]
+    covs = 0.5 * (covs + covs.transpose(0, 2, 1)) + VAR_FLOOR * jnp.eye(D)[None]
+    return FullGMM(renormalised_weights(n), means, covs)
+
+
+def psd_floor(covs, floor: float = VAR_FLOOR) -> jax.Array:
+    """Eigenvalue-clipped covariance floor ([..., D, D]): the strongest
+    floor — guarantees every covariance is PSD with spectrum >= floor."""
+    covs = 0.5 * (covs + jnp.swapaxes(covs, -1, -2))
+    lam, Q = jnp.linalg.eigh(covs)
+    lam = jnp.maximum(lam, floor)
+    return jnp.einsum("...ir,...r,...jr->...ij", Q, lam, Q)
 
 
 def full_from_diag(gmm: DiagGMM) -> FullGMM:
@@ -125,36 +171,56 @@ def full_from_diag(gmm: DiagGMM) -> FullGMM:
     return FullGMM(gmm.weights, gmm.means, covs)
 
 
-def full_em_step(gmm: FullGMM, x) -> Tuple[FullGMM, jax.Array]:
-    ll = full_loglik(gmm, x)
-    logpost = ll - jax.scipy.special.logsumexp(ll, axis=1, keepdims=True)
-    post = jnp.exp(logpost)
+def _as_utterances(x, mask, frame_chunk: int):
+    """Flat [F, D] frames (+ optional [F] mask) -> pseudo-utterances
+    [U, frame_chunk, D] with the mask carried through (padded tail marked
+    invalid); batched [U, F, D] input passes through."""
+    if x.ndim == 3:
+        return x, mask
     F, D = x.shape
-    n = jnp.sum(post, axis=0)
-    fsum = post.T @ x
-    x2 = (x[:, :, None] * x[:, None, :]).reshape(F, D * D)
-    ssum = (post.T @ x2).reshape(-1, D, D)
-    n_safe = jnp.maximum(n, 1e-6)
-    means = fsum / n_safe[:, None]
-    covs = (ssum / n_safe[:, None, None]
-            - means[:, :, None] * means[:, None, :])
-    covs = covs + VAR_FLOOR * jnp.eye(D)[None]
-    weights = jnp.maximum(n / jnp.sum(n), 1e-8)
-    avg_ll = jnp.mean(jax.scipy.special.logsumexp(ll, axis=1))
-    return FullGMM(weights, means, covs), avg_ll
+    fc = min(int(frame_chunk), F)
+    n_utts = -(-F // fc)
+    pad = n_utts * fc - F
+    feats = jnp.pad(x, ((0, pad), (0, 0))).reshape(n_utts, fc, D)
+    if pad == 0 and mask is None:
+        return feats, None
+    m = jnp.ones((F,), f32) if mask is None else mask.reshape(F).astype(f32)
+    return feats, jnp.pad(m, (0, pad)).reshape(n_utts, fc)
 
 
-def train_ubm(x, C: int, key, diag_iters: int = 8,
-              full_iters: int = 4) -> FullGMM:
-    """The Kaldi-style recipe: diag EM, then full-covariance EM."""
-    gmm = init_diag_from_data(x, C, key)
-    step_d = jax.jit(diag_em_step)
+def train_ubm(x, C: int, key, diag_iters: int = 8, full_iters: int = 4,
+              top_k: int = 0, chunk: int = 8, frame_chunk: int = 4096,
+              mask=None) -> FullGMM:
+    """The Kaldi-style recipe (diag EM, then full-covariance EM), with the
+    E-side streamed through the StatsEngine: utterance chunks are scanned
+    so nothing frame-resident ([F, C] posteriors, [F, D^2] expansions)
+    outlives one chunk — the retired whole-dataset dense path materialized
+    a [F_total, D^2] expansion (21 GB at the paper's §4.1 scale).
+
+    ``x``: flat frames [F, D] (re-chunked into ``frame_chunk``-frame
+    pseudo-utterances) or ragged-padded utterances [U, F, D] with ``mask``
+    [U, F]. ``top_k`` prunes EM responsibilities (Kaldi's gselect); 0
+    keeps all C components — exact dense EM.
+    """
+    from repro.core import engine as EN   # deferred: engine imports ubm
+    feats, mask = _as_utterances(x, mask, frame_chunk)
+    gmm = init_diag_from_data(feats, C, key, mask=mask)
+    K = int(top_k) if top_k else C
+    spec_d = EN.EngineSpec(n_components=C, top_k=K, floor=0.0,
+                           second_order="diag", chunk=chunk)
+    step_d = jax.jit(lambda g, xs, m: EN.stream_ubm(
+        spec_d, EN.pack_diag(g), xs, m))
     for _ in range(diag_iters):
-        gmm, _ = step_d(gmm, x)
+        st = step_d(gmm, feats, mask)
+        gmm = diag_m_step(st.n, st.f, st.ss)
     full = full_from_diag(gmm)
-    step_f = jax.jit(full_em_step)
+    spec_f = EN.EngineSpec(n_components=C, top_k=K, floor=0.0,
+                           second_order="full", chunk=chunk)
+    step_f = jax.jit(lambda g, xs, m: EN.stream_ubm(
+        spec_f, EN.pack_ubm(g), xs, m))
     for _ in range(full_iters):
-        full, _ = step_f(full, x)
+        st = step_f(full, feats, mask)
+        full = full_m_step(st.n, st.f, st.ss)
     return full
 
 

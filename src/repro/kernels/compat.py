@@ -1,6 +1,7 @@
-"""Version-compatibility helpers for Pallas TPU APIs."""
+"""Version-compatibility helpers for Pallas TPU and shard_map APIs."""
 from __future__ import annotations
 
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 # jax renamed TPUCompilerParams -> CompilerParams across releases; fail
@@ -14,3 +15,20 @@ except AttributeError:
         raise ImportError(
             "jax.experimental.pallas.tpu exposes neither CompilerParams "
             "nor TPUCompilerParams; unsupported jax version") from e
+
+
+# shard_map moved from jax.experimental to the jax namespace, and its
+# replication-check kwarg was renamed check_rep -> check_vma along the way
+if hasattr(jax, "shard_map"):
+    _shard_map, _REP_KW = jax.shard_map, "check_vma"
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _REP_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """`jax.shard_map` across jax versions (``check_vma`` maps onto the
+    older ``check_rep`` where needed)."""
+    kw = {} if check_vma is None else {_REP_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

@@ -22,6 +22,7 @@ from repro.core import alignment as AL
 from repro.core import stats as ST
 from repro.core import tvm as TV
 from repro.core import ubm as U
+from repro.kernels import compat, ops
 from repro.launch.mesh import make_production_mesh
 from repro.sharding import make_rules, tag, use_rules
 
@@ -47,6 +48,14 @@ def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
     Replaces: AG of [F, C] scores at top_k (68.7 GB/step) + AG at the
     stats scatter (21.7 GB/step) with an AG of [F, P*K] candidates
     (~1.5 GB/step). See EXPERIMENTS.md §Perf (ivector iters).
+
+    Every rank-local math stage is the engine's shared implementation —
+    `ubm.diag_coeffs`/`diag_loglik_from_coeffs` for the preselection
+    scores, `kernels.ops.gmm_loglik` (the vec-trick) for the full-cov
+    rescoring, `alignment.floor_renormalise` for the pruning step (which
+    also gives this path the Kaldi keep-arg-max flooring invariant), and
+    `stats.scatter_accumulate` for the Baum-Welch scatter — only the
+    collectives (candidate exchange, masked pmax, S psum) live here.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -55,12 +64,7 @@ def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
     Pm = mesh.shape["model"]
     C_loc = C // Pm
     data_axes = tuple(a for a in mesh.axis_names if a != "model")
-    d_lin = (diag_gmm.means / diag_gmm.vars).T.astype(jnp.float32)   # [D, C]
-    d_quad = (-0.5 / diag_gmm.vars).T.astype(jnp.float32)            # [D, C]
-    d_const = (-0.5 * (jnp.sum(jnp.log(diag_gmm.vars), axis=1)
-                       + D * 1.8378770664093453
-                       + jnp.sum(diag_gmm.means ** 2 / diag_gmm.vars, axis=1))
-               + jnp.log(diag_gmm.weights)).astype(jnp.float32)
+    d_const, d_lin, d_quad = U.diag_coeffs(diag_gmm)  # [C], [D, C], [D, C]
     f_const, f_lin, f_P = full_pre
     f_P = f_P.reshape(C, D * D)
 
@@ -69,7 +73,7 @@ def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
         Ub, F_, _ = feats_b.shape
         x = feats_b.reshape(-1, D)                     # [f_loc, D]
         # local diag scores + local top-K
-        dll = dc[None] + x @ dl + (x * x) @ dq         # [f_loc, C_loc]
+        dll = U.diag_loglik_from_coeffs(x, dc, dl, dq)  # [f_loc, C_loc]
         lv, li = jax.lax.top_k(dll, K)
         gi = li + r * C_loc
         # exchange candidates only
@@ -77,9 +81,8 @@ def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
         gi_all = jax.lax.all_gather(gi, "model", axis=1, tiled=True)
         sv, sp = jax.lax.top_k(lv_all, K)
         sel = jnp.take_along_axis(gi_all, sp, axis=1)  # [f_loc, K] global ids
-        # full-cov loglik for the local block (x (x) x built locally)
-        x2 = (x[:, :, None] * x[:, None, :]).reshape(-1, D * D)
-        fll = fc[None] + x @ fl.T + (-0.5) * (x2 @ fp.T)  # [f_loc, C_loc]
+        # full-cov loglik for the local block (vec-trick kernel wrapper)
+        fll = ops.gmm_loglik(x, fc, fl.T, fp)          # [f_loc, C_loc]
         own = (sel // C_loc) == r
         loc = jnp.where(own, sel % C_loc, 0)
         vals = jnp.take_along_axis(fll, loc, axis=1)
@@ -87,34 +90,21 @@ def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
         sel_ll = jax.lax.pmax(vals, "model")           # [f_loc, K] replicated
         sel_ll = sel_ll - jax.scipy.special.logsumexp(sel_ll, axis=1,
                                                       keepdims=True)
-        post = jnp.exp(sel_ll)
-        post = jnp.where(post < cfg.posterior_floor, 0.0, post)
-        post = post / jnp.maximum(jnp.sum(post, axis=1, keepdims=True),
-                                  1e-10)
+        post = AL.floor_renormalise(jnp.exp(sel_ll), cfg.posterior_floor)
         # owner-local stats: scatter only owned entries
         pv = jnp.where(own, post, 0.0)                 # [f_loc, K]
-        rows = loc.reshape(-1)
-        utt_of = jnp.repeat(jnp.arange(Ub), F_ * K)
-        n_b = jnp.zeros((Ub, C_loc), jnp.float32).at[
-            utt_of, jnp.broadcast_to(loc.reshape(Ub, -1),
-                                     (Ub, F_ * K)).reshape(-1)].add(
-            pv.reshape(-1))
-        xw = (pv[:, :, None] * x[:, None, :]).reshape(-1, D)
-        f_b = jnp.zeros((Ub, C_loc, D), jnp.float32).at[
-            utt_of, jnp.broadcast_to(loc.reshape(Ub, -1),
-                                     (Ub, F_ * K)).reshape(-1)].add(xw)
-        S_b = None
+        n_b, f_b, S_flat = ST.scatter_accumulate(
+            x, pv, loc, jnp.repeat(jnp.arange(Ub), F_), Ub, C_loc,
+            second_order="full" if second_order else None)
         if second_order:
-            x2w = (pv[:, :, None] * x2[:, None, :]).reshape(-1, D * D)
-            S_b = jnp.zeros((C_loc, D * D), jnp.float32).at[rows].add(x2w)
-            S_b = jax.lax.psum(S_b, data_axes).reshape(C_loc, D, D)
+            S_b = jax.lax.psum(S_flat, data_axes).reshape(C_loc, D, D)
         else:
             S_b = jnp.zeros((C_loc, D, D), jnp.float32)
         return n_b, f_b, S_b
 
     dp = P(data_axes, None, None)
     cshard = P("model")
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         block, mesh=mesh,
         in_specs=(dp, cshard, P(None, "model"), P(None, "model"),
                   cshard, P("model", None), P("model", None)),
@@ -161,10 +151,7 @@ def em_macro_step(cfg, mesh, ubm_w, ubm_means, ubm_covs, T, Sigma, prior,
         S_tot = S_tot + tag(S_b, "components", None, None)
         return (acc, S_tot), None
 
-    zero = TV.EMAccum(
-        A=jnp.zeros((C, R, R), f32_), B=jnp.zeros((C, D, R), f32_),
-        h=jnp.zeros((R,), f32_), H=jnp.zeros((R, R), f32_),
-        n_tot=jnp.zeros((C,), f32_), n_utts=jnp.zeros((), f32_))
+    zero = TV.EMAccum.zeros(C, D, R)
     S0 = jnp.zeros((C, D, D), f32_)
     feats_g = feats.reshape((g, utt_chunk) + feats.shape[1:])
     (acc, S), _ = jax.lax.scan(chunk_body, (zero, S0), feats_g)

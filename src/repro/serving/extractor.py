@@ -30,8 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.ivector_tvm import IVectorConfig
-from repro.core import alignment as AL
 from repro.core import backend as BK
+from repro.core import engine as EN
 from repro.core import stats as ST
 from repro.core import tvm as TV
 from repro.core import ubm as U
@@ -60,9 +60,13 @@ class IVectorExtractor:
         self.model = model
         self.ubm = ubm
         self.serving = serving
-        # expensive per-model precompute, shared by every request
-        self._diag = ubm.to_diag()
-        self._ubm_pre = U.full_precisions(ubm)
+        # expensive per-model precompute, shared by every request: the
+        # engine pack (diag preselection GMM + full-cov precisions) and
+        # the TVM precompute (T^T Sigma^{-1} T)
+        self._spec = EN.EngineSpec(
+            n_components=cfg.n_components, top_k=cfg.posterior_top_k,
+            floor=cfg.posterior_floor)
+        self._pack = EN.pack_ubm(ubm)
         self._tv_pre = TV.precompute(model)
         # jit specializes per input shape, so one jitted fn covers every
         # bucket; _seen_buckets tracks which shapes have been compiled
@@ -90,21 +94,18 @@ class IVectorExtractor:
 
     # -- the jitted per-bucket extraction -----------------------------------
 
-    def _extract_batch(self, ubm, diag, ubm_pre, model, tv_pre, feats,
-                       mask):
+    def _extract_batch(self, pack, model, tv_pre, feats, mask):
         """[B, bucket, D], [B, bucket] -> [B, R] (zero rows where mask=0).
 
         The cached model/precompute pytrees come in as jit ARGUMENTS, not
         closure constants: constants would be re-embedded into every
         bucket-shape executable (hundreds of MB each at production scale),
-        arguments share one device buffer across all buckets.
+        arguments share one device buffer across all buckets. The
+        align->stats math is the engine's canonical chunk body — the same
+        implementation the training stack streams through.
         """
-        cfg = self.cfg
-        post = jax.vmap(lambda x, m: AL.align_frames(
-            x, ubm, diag, top_k=cfg.posterior_top_k,
-            floor=cfg.posterior_floor, precomp=ubm_pre,
-            mask=m))(feats, mask)
-        st = ST.accumulate_batch(feats, post, cfg.n_components, mask=mask)
+        cs = EN.chunk_body(self._spec, pack, feats, mask)
+        st = ST.BWStats(cs.n, cs.f, None)
         if model.formulation == "standard":
             stc = ST.center(ST.BWStats(st.n, st.f, None), model.means)
             n_, f_ = stc.n, stc.f
@@ -151,9 +152,8 @@ class IVectorExtractor:
                     self.stats["real_frames"] += n
                     self.stats["padded_frames"] += bucket - n
                 out[chunk] = np.asarray(self._fn(
-                    self.ubm, self._diag, self._ubm_pre, self.model,
-                    self._tv_pre, jnp.asarray(feats),
-                    jnp.asarray(mask)))[:len(chunk)]
+                    self._pack, self.model, self._tv_pre,
+                    jnp.asarray(feats), jnp.asarray(mask)))[:len(chunk)]
                 self.stats["batches"] += 1
         self.stats["requests"] += len(utts)
         return out

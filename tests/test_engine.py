@@ -1,0 +1,319 @@
+"""StatsEngine tests: streamed chunk-body equivalence with the monolithic
+accumulation path (any chunk size, ragged masks, NaN-garbage padding),
+engine-based UBM EM invariants (weight renormalisation, PSD floors), the
+full UBM refresh at realignment, checkpointed-resume determinism, and the
+multi-seed ensemble runner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:           # keep tier-1 collection alive without it
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.configs.ivector_tvm import SMOKE as IV_SMOKE
+from repro.core import alignment as AL
+from repro.core import engine as EN
+from repro.core import pipeline as PL
+from repro.core import stats as ST
+from repro.core import trainer as TR
+from repro.core import tvm as TV
+from repro.core import ubm as U
+from repro.data.speech import SpeechDataConfig, build_dataset
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _toy_ubm(key, C=8, D=5):
+    means = jax.random.normal(key, (C, D)) * 2
+    A = jax.random.normal(jax.random.fold_in(key, 1), (C, D, D)) * 0.2
+    covs = jnp.einsum("cij,ckj->cik", A, A) + jnp.eye(D)
+    return U.FullGMM(jnp.ones((C,)) / C, means, covs)
+
+
+def _cfg(**kw):
+    base = dict(feat_dim=5, n_components=8, ivector_dim=6,
+                posterior_top_k=4, formulation="augmented")
+    base.update(kw)
+    return IV_SMOKE.with_overrides(**base)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: engine-streamed stats == monolithic accumulate_batch, for any
+# chunk size / ragged masks / garbage padding
+# ---------------------------------------------------------------------------
+
+
+def _monolithic_stats(ubm, feats, mask, top_k, floor, C):
+    """The pre-engine reference: vmapped alignment + accumulate_batch."""
+    diag = ubm.to_diag()
+    pre = U.full_precisions(ubm)
+    post = jax.vmap(lambda x, m: AL.align_frames(
+        x, ubm, diag, top_k=top_k, floor=floor, precomp=pre, mask=m),
+        in_axes=(0, None if mask is None else 0))(feats, mask)
+    return ST.accumulate_batch(feats, post, C, second_order=True, mask=mask)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 9))
+def test_stream_matches_monolithic(seed, chunk):
+    """Any scan chunking (incl. ragged tails), ragged per-utterance masks,
+    and NaN/inf garbage in the padding must reproduce the monolithic
+    accumulation exactly."""
+    key = jax.random.PRNGKey(seed)
+    C, D, Utt, F = 8, 5, 7, 24
+    ubm = _toy_ubm(jax.random.fold_in(key, 1), C, D)
+    feats = jax.random.normal(jax.random.fold_in(key, 2), (Utt, F, D))
+    lengths = jax.random.randint(jax.random.fold_in(key, 3), (Utt,), 4, F + 1)
+    mask = (jnp.arange(F)[None, :] < lengths[:, None]).astype(jnp.float32)
+    garbage = 1e30 * jax.random.normal(jax.random.fold_in(key, 4),
+                                       (Utt, F, D))
+    garbage = garbage.at[:, -1].set(jnp.nan).at[:, -2].set(jnp.inf)
+    feats = jnp.where(mask[:, :, None] > 0, feats, garbage)
+
+    spec = EN.EngineSpec(n_components=C, top_k=4, floor=0.025,
+                         second_order="full", chunk=chunk)
+    got, (ll, frames) = EN.stream_bw(spec, EN.pack_ubm(ubm), feats, mask)
+    want = _monolithic_stats(ubm, feats, mask, 4, 0.025, C)
+    np.testing.assert_allclose(np.asarray(got.n), np.asarray(want.n),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got.f), np.asarray(want.f),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got.S), np.asarray(want.S),
+                               rtol=1e-4, atol=1e-4)
+    assert float(frames) == float(jnp.sum(mask))
+    assert np.isfinite(float(ll))
+
+
+def test_chunk_body_is_serving_and_trainer_path():
+    """The serving micro-batch body and the trainer stats path are the
+    same engine chunk body (one implementation, two consumers)."""
+    cfg = _cfg()
+    ubm = _toy_ubm(jax.random.fold_in(KEY, 5))
+    feats = jax.random.normal(jax.random.fold_in(KEY, 6), (3, 16, 5))
+    mask = jnp.ones((3, 16))
+    spec = EN.EngineSpec(n_components=8, top_k=4, floor=0.025)
+    cs = EN.chunk_body(spec, EN.pack_ubm(ubm), feats, mask)
+    st = TR._align_and_stats(cfg, ubm, feats, False, mask=mask)
+    np.testing.assert_allclose(np.asarray(cs.n), np.asarray(st.n),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cs.f), np.asarray(st.f),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Engine-based UBM EM: dense-EM equivalence + weight renormalisation
+# ---------------------------------------------------------------------------
+
+
+def test_engine_diag_em_step_matches_dense_oracle():
+    """top_k=C, floor=0 engine streaming + diag_m_step == classic dense
+    diag EM (responsibilities over all components)."""
+    key = jax.random.fold_in(KEY, 10)
+    C, D = 6, 4
+    x = jax.random.normal(key, (120, D)) * 1.5
+    gmm = U.init_diag_from_data(x, C, jax.random.fold_in(key, 1))
+    spec = EN.EngineSpec(n_components=C, top_k=C, floor=0.0,
+                         second_order="diag", chunk=2)
+    feats, mask = U._as_utterances(x, None, 25)   # ragged tail: 5 x 25 > 120
+    stt = EN.stream_ubm(spec, EN.pack_diag(gmm), feats, mask)
+    got = U.diag_m_step(stt.n, stt.f, stt.ss)
+    # dense oracle
+    ll = U.diag_loglik(gmm, x)
+    post = jnp.exp(ll - jax.scipy.special.logsumexp(ll, 1, keepdims=True))
+    n = jnp.sum(post, 0)
+    want_means = (post.T @ x) / n[:, None]
+    want_vars = jnp.maximum((post.T @ (x * x)) / n[:, None]
+                            - want_means ** 2, U.VAR_FLOOR)
+    np.testing.assert_allclose(np.asarray(got.means), np.asarray(want_means),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got.vars), np.asarray(want_vars),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got.weights),
+                               np.asarray(U.renormalised_weights(n)),
+                               rtol=1e-5, atol=1e-6)
+    # diagnostic loglik is the exact dense average at top_k == C
+    np.testing.assert_allclose(
+        float(stt.loglik / stt.frames),
+        float(jnp.mean(jax.scipy.special.logsumexp(ll, 1))), rtol=1e-5)
+
+
+def test_weights_renormalised_after_flooring():
+    """The floor can only add mass; the M-step must renormalise after it
+    (the seed floored at 1e-8 without renormalising, so sum > 1)."""
+    n = jnp.asarray([1e-12, 1e-12, 5.0, 3.0])
+    w = U.renormalised_weights(n)
+    np.testing.assert_allclose(float(jnp.sum(w)), 1.0, rtol=1e-6)
+    assert float(jnp.min(w)) >= U.WEIGHT_FLOOR / 2
+    st_f = jax.random.uniform(KEY, (4, 3))
+    gm = U.diag_m_step(n, st_f, st_f + 1.0)
+    np.testing.assert_allclose(float(jnp.sum(gm.weights)), 1.0, rtol=1e-6)
+
+
+def test_train_ubm_flat_and_ragged_masked():
+    """train_ubm streams flat frames and ragged masked batches; weights
+    stay normalised and garbage in masked-out padding changes nothing."""
+    key = jax.random.fold_in(KEY, 20)
+    D = 4
+    x = jax.random.normal(key, (300, D))
+    full = U.train_ubm(x, 6, jax.random.fold_in(key, 1), diag_iters=3,
+                       full_iters=2, frame_chunk=64, chunk=2)
+    np.testing.assert_allclose(float(jnp.sum(full.weights)), 1.0, rtol=1e-5)
+    assert np.isfinite(np.asarray(full.covs)).all()
+    # ragged masked batch: padding garbage must be inert
+    feats = jax.random.normal(jax.random.fold_in(key, 2), (6, 40, D))
+    mask = (jnp.arange(40)[None] < jnp.asarray([40, 17, 25, 40, 9, 31])[:, None]
+            ).astype(jnp.float32)
+    dirty = jnp.where(mask[:, :, None] > 0, feats, jnp.nan)
+    clean = jnp.where(mask[:, :, None] > 0, feats, 0.0)
+    a = U.train_ubm(dirty, 5, jax.random.fold_in(key, 3), diag_iters=2,
+                    full_iters=1, chunk=2, mask=mask)
+    b = U.train_ubm(clean, 5, jax.random.fold_in(key, 3), diag_iters=2,
+                    full_iters=1, chunk=2, mask=mask)
+    np.testing.assert_allclose(np.asarray(a.means), np.asarray(b.means),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.covs), np.asarray(b.covs),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(jnp.sum(a.weights)), 1.0, rtol=1e-5)
+
+
+def test_train_ubm_flat_mask_honoured():
+    """A [F] mask on flat frames must be threaded through the pseudo-
+    utterance re-chunking, not silently dropped."""
+    key = jax.random.fold_in(KEY, 25)
+    D = 4
+    x = jax.random.normal(key, (200, D))
+    m = (jnp.arange(200) % 3 != 0).astype(jnp.float32)   # drop every 3rd
+    dirty = jnp.where(m[:, None] > 0, x, jnp.nan)
+    a = U.train_ubm(dirty, 4, jax.random.fold_in(key, 1), diag_iters=2,
+                    full_iters=1, frame_chunk=64, chunk=2, mask=m)
+    b = U.train_ubm(jnp.where(m[:, None] > 0, x, 0.0), 4,
+                    jax.random.fold_in(key, 1), diag_iters=2,
+                    full_iters=1, frame_chunk=64, chunk=2, mask=m)
+    assert np.isfinite(np.asarray(a.means)).all()
+    np.testing.assert_allclose(np.asarray(a.means), np.asarray(b.means),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.covs), np.asarray(b.covs),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Realignment with full UBM refresh
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    dc = SpeechDataConfig(feat_dim=6, n_components=8, n_speakers=8,
+                          utts_per_speaker=5, frames_per_utt=40,
+                          speaker_rank=5, channel_rank=3,
+                          speaker_scale=0.9, channel_scale=0.7)
+    feats, labels = build_dataset(dc)
+    ubm = U.train_ubm(feats.reshape(-1, 6), 8, jax.random.PRNGKey(3),
+                      diag_iters=3, full_iters=2)
+    return feats, labels, ubm
+
+
+def test_realign_full_refresh_trains_clean(tiny_data):
+    """realign_interval>0 with ubm_update='full' trains through without
+    NaNs; the refreshed UBM has normalised weights and PSD-floored
+    covariances."""
+    feats, labels, ubm = tiny_data
+    cfg = _cfg(feat_dim=6, n_components=8, realign_interval=1, n_iters=3,
+               ubm_update="full")
+    state = TR.train(cfg, ubm, feats, n_iters=3)
+    ivecs = np.asarray(TR.extract(cfg, state, feats))
+    assert np.isfinite(ivecs).all()
+    np.testing.assert_allclose(float(jnp.sum(state.ubm.weights)), 1.0,
+                               rtol=1e-5)
+    lam = np.linalg.eigvalsh(np.asarray(state.ubm.covs))
+    assert (lam >= U.VAR_FLOOR * (1 - 1e-3)).all()
+    # weights/covs actually moved off the seed UBM
+    assert not np.allclose(np.asarray(state.ubm.weights),
+                           np.asarray(ubm.weights))
+    assert not np.allclose(np.asarray(state.ubm.covs), np.asarray(ubm.covs))
+
+
+def test_refresh_disabled_matches_means_mode(tiny_data):
+    """With weight/covariance refresh disabled, 'full' degenerates to
+    exactly the 'means' write-back."""
+    feats, labels, ubm = tiny_data
+    cfg = _cfg(feat_dim=6, n_components=8, realign_interval=1, n_iters=2,
+               ubm_update="full")
+    state = TR.train(cfg, ubm, feats, n_iters=1)
+    spec = TR._spec(cfg, True)
+    tot = EN.stream_ubm(spec, EN.pack_ubm(state.ubm), feats)
+    got = TR.refresh_ubm(cfg, state.model, state.ubm, tot,
+                         update_weights=False, update_covs=False)
+    want = TR.refresh_ubm(cfg.with_overrides(ubm_update="means"),
+                          state.model, state.ubm, None)
+    np.testing.assert_allclose(np.asarray(got.means), np.asarray(want.means))
+    np.testing.assert_allclose(np.asarray(got.weights),
+                               np.asarray(want.weights))
+    np.testing.assert_allclose(np.asarray(got.covs), np.asarray(want.covs))
+
+
+def test_ubm_update_none_disables_writeback(tiny_data):
+    feats, labels, ubm = tiny_data
+    cfg = _cfg(feat_dim=6, n_components=8, realign_interval=1, n_iters=2,
+               ubm_update="none")
+    state = TR.train(cfg, ubm, feats, n_iters=2)
+    np.testing.assert_allclose(np.asarray(state.ubm.means),
+                               np.asarray(ubm.means))
+
+
+# ---------------------------------------------------------------------------
+# Checkpointed resume (satellite: long multi-seed runs are resumable)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_resume(tiny_data, tmp_path):
+    """Interrupt-and-resume reproduces the uninterrupted trajectory,
+    including the realignment write-backs."""
+    feats, labels, ubm = tiny_data
+    cfg = _cfg(feat_dim=6, n_components=8, realign_interval=2, n_iters=4,
+               ubm_update="full")
+    key = jax.random.PRNGKey(11)
+    ref = TR.train(cfg, ubm, feats, n_iters=4, key=key)
+    # interrupted run: 2 iterations, checkpointed...
+    ck = tmp_path / "ck"
+    st1 = TR.train(cfg, ubm, feats, n_iters=2, key=key, ckpt_dir=ck)
+    assert st1.iteration == 2
+    # ...then a fresh call resumes from the checkpoint and finishes
+    st2 = TR.train(cfg, ubm, feats, n_iters=4, key=key, ckpt_dir=ck)
+    assert st2.iteration == 4
+    np.testing.assert_allclose(np.asarray(st2.model.T),
+                               np.asarray(ref.model.T),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st2.ubm.means),
+                               np.asarray(ref.ubm.means),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st2.ubm.covs),
+                               np.asarray(ref.ubm.covs),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Multi-seed ensemble runner (paper protocol)
+# ---------------------------------------------------------------------------
+
+
+def test_run_ensemble_smoke(tiny_data, tmp_path):
+    feats, labels, ubm = tiny_data
+    cfg = _cfg(feat_dim=6, n_components=8, lda_dim=5, n_iters=2)
+    seeds = [0, 1, 2]
+    r = PL.run_ensemble(cfg, None, seeds, n_iters=2, eval_every=2,
+                        name="smoke", out_dir=tmp_path,
+                        feats=feats, labels=labels, ubm=ubm)
+    assert r["seeds"] == seeds
+    assert set(r["curves"]) == {"0", "1", "2"}
+    assert len(r["eer_mean"]) == len(r["iters"]) == len(r["eer_std"])
+    per_seed_final = [r["curves"][str(s)][-1][1] for s in seeds]
+    np.testing.assert_allclose(r["final_eer_mean"],
+                               np.mean(per_seed_final), rtol=1e-9)
+    np.testing.assert_allclose(r["final_eer_std"],
+                               np.std(per_seed_final), rtol=1e-9)
+    assert all(0.0 <= e <= 1.0 for e in per_seed_final)
+    assert (tmp_path / "smoke.json").exists()

@@ -61,6 +61,23 @@ def test_plda_scores_symmetric_in_speaker_swap(seed):
 
 @settings(**CONFIG)
 @given(st.integers(0, 10_000))
+def test_plda_pairs_match_matrix_diagonal(seed):
+    """The O(N) trial-pair scorer equals the diagonal of the full score
+    matrix (the evaluation path must not pay O(N^2) for O(N) trials)."""
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (30, 5))
+    labels = np.repeat(np.arange(6), 5)
+    plda = BK.train_plda(x, labels)
+    a = jax.random.normal(jax.random.fold_in(k, 1), (7, 5))
+    b = jax.random.normal(jax.random.fold_in(k, 2), (7, 5))
+    pairs = np.asarray(BK.plda_score_pairs(plda, a, b))
+    mat = np.asarray(BK.plda_score_matrix(plda, a, b))
+    np.testing.assert_allclose(pairs, np.diagonal(mat), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(**CONFIG)
+@given(st.integers(0, 10_000))
 def test_plda_prefers_same_speaker(seed):
     """Pairs from the same class score above pairs from different classes
     (on data actually drawn from the two-covariance model)."""
