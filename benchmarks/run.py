@@ -35,6 +35,11 @@ def main() -> None:
     rows.append(("speed/em_iteration",
                  f"{sp['em_iter_seconds_vectorized'] * 1e6:.0f}",
                  f"speedup_vs_naive={sp['em_speedup_vs_naive']:.1f}x"))
+    po = speed.posterior_compare(C=64, D=12, K=8, F=1024)
+    rows.append(("speed/posterior", "",
+                 f"hlo_flop_ratio={po['hlo_flop_ratio_dense_over_sparse']:.1f}"
+                 f";x_realtime_dense={po['dense']['x_realtime']:.0f}"
+                 f";x_realtime_sparse={po['sparse']['x_realtime']:.0f}"))
 
     # --- roofline table (deliverable g; from dry-run artifacts) ------------
     from benchmarks import roofline_table

@@ -9,7 +9,10 @@ terms of the ivector-tvm cell (197 TFLOP/s target vs measured CPU rate).
 """
 from __future__ import annotations
 
+import json
+import sys
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -148,6 +151,76 @@ def ubm_em_compare(ubm, frames, top_k_pruned, frame_chunk=512, chunk=1):
     }
 
 
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _synthetic_full_ubm(key, C, D):
+    means = jax.random.normal(key, (C, D)) * 2.0
+    A = jax.random.normal(jax.random.fold_in(key, 1), (C, D, D)) * 0.2
+    covs = jnp.einsum("cij,ckj->cik", A, A) + jnp.eye(D)
+    return U.FullGMM(jnp.ones((C,)) / C, means, covs)
+
+
+def posterior_compare(C=256, D=20, K=16, F=4096, seed=0):
+    """The paper's headline metric (§4.2: 3000x-real-time frame
+    posteriors): dense full-covariance scoring vs the sparse top-K
+    gather-and-rescore path (DESIGN.md §8), on the jnp execution path.
+
+    Reports wall-clock, frames/sec, x-real-time, and trip-count-aware
+    HLO FLOPs (`analysis.hlo_cost`) of the whole jitted alignment step —
+    the FLOP ratio isolates the C/K cut in full-cov scoring work that
+    sparsity buys on the hottest shared path.
+    """
+    from repro.analysis.hlo_cost import analyze_hlo
+
+    key = jax.random.PRNGKey(seed)
+    ubm = _synthetic_full_ubm(key, C, D)
+    diag = ubm.to_diag()
+    pre = U.full_precisions(ubm)
+    frames = jax.random.normal(jax.random.fold_in(key, 2), (F, D))
+    out = {"config": {"n_components": C, "feat_dim": D, "top_k": K,
+                      "frames": F},
+           "paper_claims": {"alignment_x_realtime": 3000},
+           # full-cov rescoring term only: dense scores C, sparse scores K
+           "analytic_rescore_flop_ratio": C / K}
+    posts = {}
+    for mode in ("dense", "sparse"):
+        fn = jax.jit(lambda x, mode=mode: AL.align_frames(
+            x, ubm, diag, top_k=K, floor=0.025, precomp=pre,
+            rescore=mode))
+        compiled = fn.lower(frames).compile()   # compile ONCE; time + walk it
+        t = _timeit(compiled, frames)
+        hlo = analyze_hlo(compiled.as_text())
+        posts[mode] = compiled(frames)
+        out[mode] = {
+            "seconds_per_call": t,
+            "frames_per_second": F / t,
+            "x_realtime": (F / FRAME_RATE) / t,
+            "hlo_flops": hlo["flops"],
+            "hlo_flops_per_frame": hlo["flops"] / F,
+        }
+    out["hlo_flop_ratio_dense_over_sparse"] = (
+        out["dense"]["hlo_flops"] / out["sparse"]["hlo_flops"])
+    out["wall_speedup_sparse"] = (out["dense"]["seconds_per_call"]
+                                  / out["sparse"]["seconds_per_call"])
+    out["max_abs_posterior_diff"] = float(jnp.max(jnp.abs(
+        posts["dense"].values - posts["sparse"].values)))
+    return out
+
+
+def run_posterior(smoke: bool = False, out_path=None):
+    """The `posterior` bench case: writes the machine-readable perf
+    trajectory point ``BENCH_posterior.json`` at the repo root (CI runs
+    the smoke scale so the artifact generation can't silently rot)."""
+    kw = (dict(C=64, D=12, K=8, F=1024) if smoke
+          else dict(C=256, D=20, K=16, F=4096))
+    r = posterior_compare(**kw)
+    r["smoke"] = smoke
+    p = Path(out_path) if out_path else REPO_ROOT / "BENCH_posterior.json"
+    p.write_text(json.dumps(r, indent=2) + "\n")
+    return r
+
+
 def run():
     def compute():
         feats, labels, ubm = prepare(BENCH_CFG, BENCH_DATA, seed=0)
@@ -209,6 +282,10 @@ def run():
 
 
 if __name__ == "__main__":
-    r = run()
-    for k, v in r.items():
-        print(k, v)
+    if "posterior" in sys.argv[1:]:
+        r = run_posterior(smoke="--smoke" in sys.argv[1:])
+        print(json.dumps(r, indent=2))
+    else:
+        r = run()
+        for k, v in r.items():
+            print(k, v)

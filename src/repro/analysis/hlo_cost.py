@@ -51,6 +51,37 @@ _SKIP_BYTES = {
 }
 
 
+def _split_operands(opnds: str) -> List[str]:
+    """Operand list -> operand NAMES, robust to typed operand syntax.
+
+    Modern HLO text types every operand (``f32[64,64]{1,0} %lhs``), so a
+    naive ``split(",")`` breaks inside ``[64,64]``/``{1,0}`` and shape
+    lookups silently miss (a dot's contracting dims then collapse to 1 —
+    the bug behind under-counted scan FLOPs). Split only at bracket depth
+    0 and keep each piece's trailing token (the ``%name``; bare tokens
+    like ``parameter(0)``'s index pass through unchanged).
+    """
+    parts: List[str] = []
+    depth, cur = 0, []
+    for ch in opnds:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth <= 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    out = []
+    for p in parts:
+        p = p.strip()
+        if p:
+            out.append(p.split()[-1].lstrip("%"))
+    return out
+
+
 def _type_bytes(type_str: str) -> int:
     total = 0
     for m in _SHAPE_RE.finditer(type_str):
@@ -139,8 +170,7 @@ class HloCostModel:
             if not m:
                 continue
             root, name, type_str, opcode, opnds, tail = m.groups()
-            operands = [o.strip().lstrip("%") for o in opnds.split(",")
-                        if o.strip()]
+            operands = _split_operands(opnds)
             self.comps[cur].append(
                 _Op(name, type_str, opcode, operands, tail, bool(root)))
 

@@ -31,6 +31,13 @@ class IVectorConfig:
     # alignment (paper §4.2): top-K pruning + posterior floor + renormalise
     posterior_top_k: int = 20
     posterior_floor: float = 0.025
+    # full-covariance scoring of the preselected set (DESIGN.md §8):
+    #   'sparse' - gather-and-rescore only the K selected components
+    #              (kernels/gmm_rescore.py): a C/K (~100x at this scale)
+    #              FLOP cut on the hottest path; the paper-regime default
+    #   'dense'  - score all C densely and gather (vec-trick matmul);
+    #              the CPU/reference fallback, wins at small C
+    rescore: str = "sparse"
     # training-batch geometry for the distributed EM step. The paper's GPU
     # processed one small batch; a 256-chip pod weak-scales the E-step:
     # 8192 utts/macro-step (32/chip) amortizes the fixed [C,R,R] accumulator

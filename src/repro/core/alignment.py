@@ -1,11 +1,20 @@
 """Frame alignment: posterior computation with Kaldi's pruning recipe
-(paper §4.2), adapted to TPU (DESIGN.md §2-§3).
+(paper §4.2), adapted to TPU (DESIGN.md §2-§3, §8) as an explicit
+two-phase preselect → rescore pipeline:
 
-1. diagonal-covariance preselection scores (cheap matmul),
-2. full-covariance log-likelihoods evaluated DENSELY (vec-trick matmul; on
-   TPU the dense MXU path beats gathered sparse evaluation),
-3. intersect with the diag top-K preselection, drop posteriors < floor,
-   renormalise to sum 1.
+1. **preselect** — diagonal-covariance scores for all C (cheap matmul),
+   top-K component ids per frame,
+2. **rescore_selected** — full-covariance log-likelihood of the selected
+   set, in one of two modes:
+     'dense'  — evaluate all C densely (vec-trick MXU matmul, §2) and
+                gather K; the CPU/reference fallback, and the winner at
+                small C where the MXU is cheap and gathers are not,
+     'sparse' — gather-and-rescore ONLY the K selected components
+                (`kernels.ops.gmm_rescore`, §8): the [F, C] score matrix
+                is never materialised — a C/K FLOP cut on the hot path,
+3. intersect is free (softmax/floor already operate on the gathered
+   [F, K] set, so both modes feed bit-identical downstream math), drop
+   posteriors < floor, renormalise to sum 1.
 
 Output is sparse: (values [F, K], indices [F, K]) — the compact form the
 paper stores to disk; here it flows straight into Baum-Welch accumulation.
@@ -43,15 +52,44 @@ def floor_renormalise(post, floor: float) -> jax.Array:
     return post / jnp.maximum(jnp.sum(post, axis=1, keepdims=True), 1e-10)
 
 
+def preselect(diag: U.DiagGMM, x, top_k: int):
+    """Phase 1: diag-UBM scores [F, C] + top-K component ids [F, K]."""
+    diag_ll = U.diag_loglik(diag, x)
+    _, sel = jax.lax.top_k(diag_ll, top_k)
+    return diag_ll, sel
+
+
+def rescore_selected(x, sel, full, diag_ll, *, precomp=None,
+                     rescore: str = "dense", rescore_pack=None):
+    """Phase 2: loglik of the selected components -> [F, K].
+
+    ``full`` None scores the selected set with the (already-computed)
+    diag scores — the diag phase of UBM EM, where there is nothing to
+    rescore and ``rescore`` is moot. 'dense' evaluates all C and gathers
+    (exact current-TPU adaptation); 'sparse' gathers first and scores
+    only K (``kernels.ops.gmm_rescore``), never materialising [F, C].
+    """
+    if full is None:
+        return jnp.take_along_axis(diag_ll, sel, axis=1)
+    if rescore == "sparse":
+        return U.full_rescore(full, x, sel, precomp=precomp,
+                              pack=rescore_pack)
+    if rescore != "dense":
+        raise ValueError(f"rescore must be 'dense' or 'sparse': {rescore}")
+    ll = U.full_loglik(full, x, precomp=precomp)            # [F, C]
+    return jnp.take_along_axis(ll, sel, axis=1)
+
+
 def align_frames(x, full, diag: U.DiagGMM, *, top_k: int = 20,
                  floor: float = 0.025, precomp=None, mask=None,
-                 with_loglik: bool = False):
+                 with_loglik: bool = False, rescore: str = "dense",
+                 rescore_pack=None):
     """x: [F, D] -> sparse pruned-renormalised posteriors.
 
     Follows Kaldi/the paper: preselect with the diag UBM, score the
-    selected components with the full UBM, floor + renormalise. The dense
-    TPU adaptation evaluates full-cov loglik for all C and masks to the
-    diag-selected set (identical result, matmul-friendly).
+    selected components with the full UBM (``rescore`` mode: 'dense'
+    matmul-and-gather or 'sparse' gather-and-rescore — same selected set,
+    same downstream softmax/floor), floor + renormalise.
 
     ``full`` may be None: the selected components are then scored with the
     diag UBM itself (the diag phase of UBM EM; with top_k == C and
@@ -64,14 +102,10 @@ def align_frames(x, full, diag: U.DiagGMM, *, top_k: int = 20,
     selected set ([F], zeroed on masked frames) — the EM diagnostic
     loglik, exact when top_k == C.
     """
-    diag_ll = U.diag_loglik(diag, x)                       # [F, C]
-    _, sel = jax.lax.top_k(diag_ll, top_k)                 # [F, K]
-    if full is None:
-        ll = diag_ll
-    else:
-        ll = U.full_loglik(full, x, precomp=precomp)       # [F, C]
-    # gather selected lls, softmax over the selected set only
-    sel_ll = jnp.take_along_axis(ll, sel, axis=1)          # [F, K]
+    diag_ll, sel = preselect(diag, x, top_k)               # [F, C], [F, K]
+    sel_ll = rescore_selected(x, sel, full, diag_ll, precomp=precomp,
+                              rescore=rescore,
+                              rescore_pack=rescore_pack)   # [F, K]
     lse = jax.scipy.special.logsumexp(sel_ll, axis=1)      # [F]
     post = floor_renormalise(jnp.exp(sel_ll - lse[:, None]), floor)
     if mask is not None:

@@ -54,6 +54,7 @@ class EngineSpec:
     floor: float
     second_order: Optional[str] = None   # None | 'diag' | 'full'
     chunk: int = 0                       # utterances per scan chunk; 0 = all
+    rescore: str = "dense"               # 'dense' | 'sparse' (DESIGN.md §8)
 
 
 class UBMPack(NamedTuple):
@@ -63,14 +64,17 @@ class UBMPack(NamedTuple):
     full: Optional[U.FullGMM]     # None => diag-only scoring (UBM diag EM)
     diag: U.DiagGMM               # preselection (and diag-phase) GMM
     pre: Optional[Tuple]          # full_precisions(full)
+    rescore_A: Optional[jax.Array] = None  # ubm.rescore_pack(pre): the
+    # packed [C, 1+D+D²] gather rows the sparse rescoring kernel DMAs
 
 
 def pack_ubm(ubm: U.FullGMM) -> UBMPack:
-    return UBMPack(ubm, ubm.to_diag(), U.full_precisions(ubm))
+    pre = U.full_precisions(ubm)
+    return UBMPack(ubm, ubm.to_diag(), pre, U.rescore_pack(pre))
 
 
 def pack_diag(gmm: U.DiagGMM) -> UBMPack:
-    return UBMPack(None, gmm, None)
+    return UBMPack(None, gmm, None, None)
 
 
 class ChunkStats(NamedTuple):
@@ -104,7 +108,8 @@ def chunk_body(spec: EngineSpec, pack: UBMPack, feats_c,
     m = None if mask_c is None else mask_c.reshape(u * F)
     post, lse = AL.align_frames(
         x, pack.full, pack.diag, top_k=spec.top_k, floor=spec.floor,
-        precomp=pack.pre, mask=m, with_loglik=True)
+        precomp=pack.pre, mask=m, with_loglik=True, rescore=spec.rescore,
+        rescore_pack=pack.rescore_A)
     n, f, S = ST.scatter_accumulate(
         x, post.values, post.indices, jnp.repeat(jnp.arange(u), F), u,
         spec.n_components, second_order=spec.second_order, mask=m)

@@ -48,7 +48,7 @@ def _spec(cfg: IVectorConfig, second_order: bool) -> EN.EngineSpec:
         n_components=cfg.n_components, top_k=cfg.posterior_top_k,
         floor=cfg.posterior_floor,
         second_order="full" if second_order else None,
-        chunk=cfg.estep_chunk)
+        chunk=cfg.estep_chunk, rescore=cfg.rescore)
 
 
 def _align_and_stats(cfg: IVectorConfig, ubm: U.FullGMM, feats,

@@ -99,6 +99,29 @@ def full_loglik(gmm: FullGMM, x, precomp=None) -> jax.Array:
     return ops.gmm_loglik(x, const, lin.T, P.reshape(-1, D * D))
 
 
+def rescore_pack(precomp) -> jax.Array:
+    """``full_precisions`` output -> [C, 1 + D + D²] packed rows
+    A[c] = [const_c | lin_c | vec(P_c)] — the gather unit of the sparse
+    rescoring kernel (one row DMA per selected (frame, slot) pair; see
+    DESIGN.md §8). Built once per UBM alongside the precompute and cached
+    in ``engine.UBMPack`` / the serving session."""
+    from repro.kernels import ref
+    const, lin, P = precomp
+    C, D = lin.shape
+    return ref.rescore_pack(const, lin.T, P.reshape(C, D * D))
+
+
+def full_rescore(gmm, x, sel, precomp=None, pack=None) -> jax.Array:
+    """x: [F, D], sel: [F, K] component ids -> [F, K] loglik of ONLY the
+    selected components (sparse gather-and-rescore; never materialises
+    [F, C]). ``gmm`` may be None when ``precomp`` is given."""
+    from repro.kernels import ops
+    const, lin, P = precomp if precomp is not None else full_precisions(gmm)
+    D = x.shape[1]
+    return ops.gmm_rescore(x, sel, const, lin.T, P.reshape(-1, D * D),
+                           pack=pack)
+
+
 # ---------------------------------------------------------------------------
 # EM training (E-side streamed through core/engine.py; M-steps here)
 # ---------------------------------------------------------------------------
@@ -190,7 +213,7 @@ def _as_utterances(x, mask, frame_chunk: int):
 
 def train_ubm(x, C: int, key, diag_iters: int = 8, full_iters: int = 4,
               top_k: int = 0, chunk: int = 8, frame_chunk: int = 4096,
-              mask=None) -> FullGMM:
+              mask=None, rescore: str = "dense") -> FullGMM:
     """The Kaldi-style recipe (diag EM, then full-covariance EM), with the
     E-side streamed through the StatsEngine: utterance chunks are scanned
     so nothing frame-resident ([F, C] posteriors, [F, D^2] expansions)
@@ -200,7 +223,10 @@ def train_ubm(x, C: int, key, diag_iters: int = 8, full_iters: int = 4,
     ``x``: flat frames [F, D] (re-chunked into ``frame_chunk``-frame
     pseudo-utterances) or ragged-padded utterances [U, F, D] with ``mask``
     [U, F]. ``top_k`` prunes EM responsibilities (Kaldi's gselect); 0
-    keeps all C components — exact dense EM.
+    keeps all C components — exact dense EM. ``rescore`` ('dense' |
+    'sparse') picks how the full-covariance phase scores the selected
+    set (DESIGN.md §8); it only pays off with a pruned ``top_k``, and
+    the diag phase (no full-cov rescoring) ignores it.
     """
     from repro.core import engine as EN   # deferred: engine imports ubm
     feats, mask = _as_utterances(x, mask, frame_chunk)
@@ -215,7 +241,8 @@ def train_ubm(x, C: int, key, diag_iters: int = 8, full_iters: int = 4,
         gmm = diag_m_step(st.n, st.f, st.ss)
     full = full_from_diag(gmm)
     spec_f = EN.EngineSpec(n_components=C, top_k=K, floor=0.0,
-                           second_order="full", chunk=chunk)
+                           second_order="full", chunk=chunk,
+                           rescore=rescore)
     step_f = jax.jit(lambda g, xs, m: EN.stream_ubm(
         spec_f, EN.pack_ubm(g), xs, m))
     for _ in range(full_iters):

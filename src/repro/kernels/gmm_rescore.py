@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused gather-and-rescore for sparse top-K GMM
+log-likelihood (DESIGN.md §8).
+
+The dense kernel (`gmm_loglik.py`) scores every frame against every
+component — O(F·C·D²) — and the alignment recipe then keeps only the K
+diag-preselected components per frame, discarding ~99% of the work at the
+paper's scale (K=20 of C=2048). This kernel computes the `[F, K]` selected
+logliks directly: per frame-tile it DMA-gathers the K packed precompute
+rows (const | lin | P, see `ref.rescore_pack`) from HBM into VMEM — the
+`[F, C]` score matrix and the untouched C−K precision blocks never move —
+and evaluates the quadratic form against the tile's in-VMEM `[BF, D²]`
+expansion.
+
+Grid: (F/BF,). VMEM per step ~ BF·K·E floats (E = 1 + D + D², padded to a
+lane multiple), so BF is small (default 8): the kernel is gather-bound by
+construction, trading MXU-friendly dense FLOPs for a C/K cut in both
+FLOPs and HBM precision-block traffic. Dense wins when C is small or K
+approaches C (see DESIGN.md §8 for the crossover); the alignment layer
+keeps both paths selectable.
+
+The selected-id block rides in SMEM so row addresses are scalar reads;
+row DMAs are double-buffered (two in flight) via a 2-slot semaphore
+array. Each (frame, slot) destination row is distinct, so overlapping
+copies never alias.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+f32 = jnp.float32
+
+# default frame-tile; the ops.py wrapper pads ragged F against this
+BLOCK_F = 8
+
+
+def _kernel(sel_ref, x_ref, a_ref, out_ref, gath_ref, sem_ref):
+    bf, K = out_ref.shape
+
+    def row_dma(i, slot):
+        f, k = i // K, i % K
+        return pltpu.make_async_copy(
+            a_ref.at[sel_ref[f, k]], gath_ref.at[f, k], sem_ref.at[slot])
+
+    row_dma(0, 0).start()
+
+    def body(i, carry):
+        @pl.when(i + 1 < bf * K)
+        def _():
+            row_dma(i + 1, (i + 1) % 2).start()
+        row_dma(i, i % 2).wait()
+        return carry
+
+    jax.lax.fori_loop(0, bf * K, body, 0)
+
+    x = x_ref[...].astype(f32)                       # [BF, D]
+    d = x.shape[1]
+    x2 = (x[:, :, None] * x[:, None, :]).reshape(bf, d * d)
+    g = gath_ref[...].astype(f32)                    # [BF, K, E]
+    const_g = g[:, :, 0]
+    lin_g = g[:, :, 1:1 + d]
+    p_g = g[:, :, 1 + d:1 + d + d * d]
+    # batched (per-frame) mat-vecs against the gathered K rows; the same
+    # three-term decomposition as the dense kernel, so the two paths
+    # agree to float32 rounding
+    lin_t = jax.lax.dot_general(
+        x, lin_g, (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=f32)                  # [BF, K]
+    quad = jax.lax.dot_general(
+        x2, p_g, (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=f32)                  # [BF, K]
+    out_ref[...] = const_g + lin_t - 0.5 * quad
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def gmm_rescore(x, sel, A, *, block_f: int = BLOCK_F,
+                interpret: bool = True):
+    """x: [F, D]; sel: [F, K] int32 in [0, C); A: [C, E] packed rows
+    (``ref.rescore_pack``, E >= 1 + D + D*D; extra columns are padding)
+    -> [F, K] selected log-likelihoods."""
+    F, D = x.shape
+    K = sel.shape[1]
+    E = A.shape[1]
+    bf = min(block_f, F)
+    assert F % bf == 0, (F, bf)
+    assert E >= 1 + D + D * D, (E, D)
+    grid = (F // bf,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bf, K), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bf, D), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),    # A stays in HBM
+        ],
+        out_specs=pl.BlockSpec((bf, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, K), f32),
+        scratch_shapes=[
+            pltpu.VMEM((bf, K, E), f32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(sel, x, A)

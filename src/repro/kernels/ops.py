@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import bw_stats as _bw
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gmm_loglik as _gl
+from repro.kernels import gmm_rescore as _gr
 from repro.kernels import ref
 from repro.kernels import tvm_estep as _te
 
@@ -56,6 +57,36 @@ def gmm_loglik(x, const, lin, P_flat, **kw):
                              interpret=_INTERPRET.get(), **kw)
         return out[:F, :C] if (Fp, Cp) != (F, C) else out
     return ref.gmm_loglik(x, const, lin, P_flat)
+
+
+def gmm_rescore(x, sel, const, lin, P_flat, pack=None, **kw):
+    """Sparse top-K rescoring: loglik of only the selected components.
+
+    x: [F, D]; sel: [F, K] component ids; const/lin/P_flat as in
+    ``gmm_loglik``. ``pack`` optionally supplies the pre-built
+    ``ref.rescore_pack`` matrix (serving caches it per session) so the
+    Pallas path skips the concat. Ragged F is zero-padded to the kernel's
+    frame-tile and sliced back; indices are clipped into [0, C) so
+    padding rows (and garbage preselections from masked frames) can
+    never DMA out of bounds.
+    """
+    if _USE_PALLAS.get():
+        F = x.shape[0]
+        C = const.shape[0]
+        A = ref.rescore_pack(const, lin, P_flat) if pack is None else pack
+        E = A.shape[1]
+        Ep = _ceil_to(E, 128)
+        if Ep != E:
+            A = jnp.pad(A, ((0, 0), (0, Ep - E)))
+        bf = min(kw.get("block_f", _gr.BLOCK_F), F)
+        Fp = _ceil_to(F, bf)
+        sel = jnp.clip(sel.astype(jnp.int32), 0, C - 1)
+        if Fp != F:
+            x = jnp.pad(x, ((0, Fp - F), (0, 0)))
+            sel = jnp.pad(sel, ((0, Fp - F), (0, 0)))
+        out = _gr.gmm_rescore(x, sel, A, interpret=_INTERPRET.get(), **kw)
+        return out[:F] if Fp != F else out
+    return ref.gmm_rescore(x, sel, const, lin, P_flat)
 
 
 def bw_stats(gamma, x, **kw):

@@ -23,6 +23,41 @@ def gmm_loglik(x, const, lin, P_flat):
             ).astype(f32)
 
 
+def gmm_rescore(x, sel, const, lin, P_flat):
+    """Sparse top-K full-covariance rescoring: loglik of the SELECTED
+    components only (Kaldi's gselect regime; DESIGN.md §8).
+
+    x: [F, D]; sel: [F, K] int32 component ids; const: [C]; lin: [D, C];
+    P_flat: [C, D*D] (row-major precision matrices). Returns [F, K]:
+
+        out[f, k] = const[sel[f,k]] + x_f . lin[:, sel[f,k]]
+                    - 0.5 vec(x_f x_f^T) . P_flat[sel[f,k]]
+
+    — the same three-term decomposition as ``gmm_loglik`` followed by
+    ``take_along_axis``, but only K of the C components are ever touched:
+    a C/K FLOP cut on the quadratic term. Duplicate / clipped indices are
+    allowed (each slot scores independently).
+    """
+    F, D = x.shape
+    x2 = (x[:, :, None] * x[:, None, :]).reshape(F, D * D)
+    lin_g = jnp.take(lin.T, sel, axis=0)                    # [F, K, D]
+    P_g = jnp.take(P_flat, sel, axis=0)                     # [F, K, D*D]
+    return (jnp.take(const, sel)
+            + jnp.einsum("fd,fkd->fk", x, lin_g,
+                         preferred_element_type=f32)
+            - 0.5 * jnp.einsum("fe,fke->fk", x2, P_g,
+                               preferred_element_type=f32)).astype(f32)
+
+
+def rescore_pack(const, lin, P_flat):
+    """Pack the full-cov precompute into ONE gatherable row per component:
+    A[c] = [const_c | lin[:, c] | P_flat[c]], shape [C, 1 + D + D*D].
+    The Pallas rescore kernel DMAs exactly one packed row per selected
+    (frame, slot) pair instead of three strided gathers."""
+    return jnp.concatenate(
+        [const[:, None], lin.T, P_flat], axis=1).astype(f32)
+
+
 def bw_stats(gamma, x):
     """Dense Baum-Welch moments.
 

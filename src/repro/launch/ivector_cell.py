@@ -34,13 +34,17 @@ def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
     """Alignment + Baum-Welch stats with components sharded over 'model',
     all collectives explicit (shard_map):
 
-      1. each model rank scores its C-block (diag preselect + dense
-         full-cov loglik — the vec-trick matmul, frames replicated over
-         'model'),
+      1. each model rank diag-preselects over its C-block (frames
+         replicated over 'model'),
       2. two-stage top-K: local top-K per rank, all-gather only the
          [*, K] candidates (not the [*, C] scores), global top-K,
-      3. selected full-cov loglik assembled with a masked pmax (each
-         component is owned by exactly one rank),
+      3. full-cov loglik of the selected set, per ``cfg.rescore``
+         (DESIGN.md §8): 'dense' scores the whole local C-block with the
+         vec-trick matmul and gathers the owned entries; 'sparse'
+         gather-and-rescores ONLY the K selected slots (the [f_loc,
+         C_loc] block scores are never materialised). Either way the
+         replicated [*, K] logliks are assembled with a masked pmax
+         (each component is owned by exactly one rank),
       4. floor + renormalise (replicated, tiny),
       5. stats accumulated owner-locally: a rank scatters only the
          posterior entries whose component it owns — zero stats comms.
@@ -51,15 +55,17 @@ def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
 
     Every rank-local math stage is the engine's shared implementation —
     `ubm.diag_coeffs`/`diag_loglik_from_coeffs` for the preselection
-    scores, `kernels.ops.gmm_loglik` (the vec-trick) for the full-cov
-    rescoring, `alignment.floor_renormalise` for the pruning step (which
-    also gives this path the Kaldi keep-arg-max flooring invariant), and
-    `stats.scatter_accumulate` for the Baum-Welch scatter — only the
-    collectives (candidate exchange, masked pmax, S psum) live here.
+    scores, `kernels.ops.gmm_loglik` / `ops.gmm_rescore` for the
+    full-cov rescoring, `alignment.floor_renormalise` for the pruning
+    step (which also gives this path the Kaldi keep-arg-max flooring
+    invariant), and `stats.scatter_accumulate` for the Baum-Welch
+    scatter — only the collectives (candidate exchange, masked pmax,
+    S psum) live here.
     """
     from jax.sharding import PartitionSpec as P
 
     K = cfg.posterior_top_k
+    rescore = getattr(cfg, "rescore", "dense")
     C, D = cfg.n_components, cfg.feat_dim
     Pm = mesh.shape["model"]
     C_loc = C // Pm
@@ -81,11 +87,17 @@ def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
         gi_all = jax.lax.all_gather(gi, "model", axis=1, tiled=True)
         sv, sp = jax.lax.top_k(lv_all, K)
         sel = jnp.take_along_axis(gi_all, sp, axis=1)  # [f_loc, K] global ids
-        # full-cov loglik for the local block (vec-trick kernel wrapper)
-        fll = ops.gmm_loglik(x, fc, fl.T, fp)          # [f_loc, C_loc]
         own = (sel // C_loc) == r
         loc = jnp.where(own, sel % C_loc, 0)
-        vals = jnp.take_along_axis(fll, loc, axis=1)
+        if rescore == "sparse":
+            # gather-and-rescore only the selected slots against the
+            # local C-block (unowned slots score component 0 and are
+            # masked out below) — [f_loc, C_loc] never materialises
+            vals = ops.gmm_rescore(x, loc, fc, fl.T, fp)
+        else:
+            # dense vec-trick over the local block, then gather
+            fll = ops.gmm_loglik(x, fc, fl.T, fp)      # [f_loc, C_loc]
+            vals = jnp.take_along_axis(fll, loc, axis=1)
         vals = jnp.where(own, vals, -jnp.inf)
         sel_ll = jax.lax.pmax(vals, "model")           # [f_loc, K] replicated
         sel_ll = sel_ll - jax.scipy.special.logsumexp(sel_ll, axis=1,
@@ -199,7 +211,11 @@ def model_flops(cfg, n_utts: int) -> float:
     C, D, R, K = (cfg.n_components, cfg.feat_dim, cfg.ivector_dim,
                   cfg.posterior_top_k)
     F = n_utts * cfg.frames_per_utt
-    align = 2.0 * F * (D * D + 2 * D) * C          # dense loglik matmuls
+    align = 2.0 * F * 2 * D * C                    # diag preselect matmuls
+    if getattr(cfg, "rescore", "dense") == "sparse":
+        align += 2.0 * F * K * (D * D + D)         # gather-and-rescore K
+    else:
+        align += 2.0 * F * (D * D + D) * C         # dense loglik matmuls
     stats = 2.0 * F * K * (D * D + D)              # sparse accumulation
     estep_L = 2.0 * n_utts * C * R * R             # n @ U contraction
     estep_rhs = 2.0 * n_utts * C * D * R

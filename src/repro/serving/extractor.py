@@ -5,8 +5,10 @@ ragged — one utterance per request, each a different number of frames. This
 module turns the trained (UBM, TVM) pair into a serving session:
 
   * **cached precompute** — ``full_precisions(ubm)`` (Cholesky + inverse of
-    C full covariances), the diag preselection GMM, and ``TV.precompute``
-    (T^T Σ^{-1} T) are computed once per session, not once per call;
+    C full covariances), the diag preselection GMM, the packed sparse-
+    rescoring rows (``ubm.rescore_pack``, DESIGN.md §8), and
+    ``TV.precompute`` (T^T Σ^{-1} T) are computed once per session, not
+    once per call;
   * **power-of-two frame buckets** — each utterance is zero-padded (with a
     frame mask) to the next power-of-two frame count, so the number of
     distinct jitted shapes is O(log max_frames) instead of O(#lengths);
@@ -65,7 +67,7 @@ class IVectorExtractor:
         # the TVM precompute (T^T Sigma^{-1} T)
         self._spec = EN.EngineSpec(
             n_components=cfg.n_components, top_k=cfg.posterior_top_k,
-            floor=cfg.posterior_floor)
+            floor=cfg.posterior_floor, rescore=cfg.rescore)
         self._pack = EN.pack_ubm(ubm)
         self._tv_pre = TV.precompute(model)
         # jit specializes per input shape, so one jitted fn covers every

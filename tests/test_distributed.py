@@ -177,3 +177,41 @@ def test_mini_dryrun_multipod_compiles():
         print('DRYRUN_OK', int(r['flops']))
     """)
     assert "DRYRUN_OK" in out
+
+
+def test_sharded_sparse_rescore_matches_dense():
+    """The owner-local sharded alignment (components over 'model') gives
+    the same Baum-Welch stats whether each rank scores its whole C-block
+    densely or gather-and-rescores only the selected slots (DESIGN.md
+    §8) — the collectives are identical, only the rank-local scoring
+    changes."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs.ivector_tvm import SMOKE
+        from repro.core import ubm as U
+        from repro.launch import ivector_cell as IC
+        cfg = SMOKE.with_overrides(feat_dim=6, n_components=16,
+                                   posterior_top_k=4)
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2),
+                    ('data', 'model'))
+        key = jax.random.PRNGKey(0)
+        C, D = cfg.n_components, cfg.feat_dim
+        means = jax.random.normal(key, (C, D))
+        A = jax.random.normal(jax.random.fold_in(key, 1), (C, D, D)) * 0.3
+        covs = jnp.einsum('cij,ckj->cik', A, A) + jnp.eye(D)
+        ubm = U.FullGMM(jnp.ones((C,)) / C, means, covs)
+        feats = jax.random.normal(jax.random.fold_in(key, 2), (8, 32, D))
+        pre = U.full_precisions(ubm)
+        outs = {}
+        for mode in ('dense', 'sparse'):
+            c = cfg.with_overrides(rescore=mode)
+            with mesh:
+                outs[mode] = IC.sharded_align_stats(
+                    c, mesh, ubm.to_diag(), pre, feats, True)
+        for a, b in zip(outs['dense'], outs['sparse']):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-4)
+        print('SPARSE_SHARD_OK')
+    """)
+    assert "SPARSE_SHARD_OK" in out

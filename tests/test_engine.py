@@ -94,13 +94,88 @@ def test_chunk_body_is_serving_and_trainer_path():
     ubm = _toy_ubm(jax.random.fold_in(KEY, 5))
     feats = jax.random.normal(jax.random.fold_in(KEY, 6), (3, 16, 5))
     mask = jnp.ones((3, 16))
-    spec = EN.EngineSpec(n_components=8, top_k=4, floor=0.025)
+    spec = EN.EngineSpec(n_components=8, top_k=4, floor=0.025,
+                         rescore=cfg.rescore)
     cs = EN.chunk_body(spec, EN.pack_ubm(ubm), feats, mask)
     st = TR._align_and_stats(cfg, ubm, feats, False, mask=mask)
     np.testing.assert_allclose(np.asarray(cs.n), np.asarray(st.n),
                                rtol=1e-6, atol=1e-6)
     np.testing.assert_allclose(np.asarray(cs.f), np.asarray(st.f),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Sparse gather-and-rescore == dense-and-gather (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 8))
+def test_sparse_rescore_matches_dense_any_k(seed, top_k):
+    """For ANY K (including K == C) and ragged masks with NaN/inf garbage
+    padding, the sparse rescoring path produces the same posteriors,
+    indices, stats, and diagnostic loglik as the dense-then-gather path
+    (both floor/softmax over the same gathered [F, K] set)."""
+    key = jax.random.PRNGKey(seed)
+    C, D, Utt, F = 8, 5, 5, 16
+    ubm = _toy_ubm(jax.random.fold_in(key, 1), C, D)
+    feats = jax.random.normal(jax.random.fold_in(key, 2), (Utt, F, D))
+    lengths = jax.random.randint(jax.random.fold_in(key, 3), (Utt,), 2,
+                                 F + 1)
+    mask = (jnp.arange(F)[None, :] < lengths[:, None]).astype(jnp.float32)
+    garbage = 1e30 * jax.random.normal(jax.random.fold_in(key, 4),
+                                       (Utt, F, D))
+    garbage = garbage.at[:, -1].set(jnp.nan).at[:, -2].set(jnp.inf)
+    feats = jnp.where(mask[:, :, None] > 0, feats, garbage)
+    pack = EN.pack_ubm(ubm)
+    outs = {}
+    for mode in ("dense", "sparse"):
+        spec = EN.EngineSpec(n_components=C, top_k=top_k, floor=0.025,
+                             second_order="full", chunk=2, rescore=mode)
+        outs[mode] = EN.stream_bw(spec, pack, feats, mask)
+    (bw_d, (ll_d, fr_d)), (bw_s, (ll_s, fr_s)) = outs["dense"], outs["sparse"]
+    np.testing.assert_allclose(np.asarray(bw_s.n), np.asarray(bw_d.n),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(bw_s.f), np.asarray(bw_d.f),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(bw_s.S), np.asarray(bw_d.S),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(ll_s), float(ll_d), rtol=1e-5)
+    assert float(fr_s) == float(fr_d)
+
+
+def test_sparse_rescore_keeps_argmax_floor_invariant():
+    """The Kaldi keep-arg-max flooring (no frame ever vanishes) must
+    survive the sparse path: with a floor so high it would zero every
+    selected posterior, each valid frame still sums to 1."""
+    key = jax.random.fold_in(KEY, 40)
+    C, D, F = 8, 5, 32
+    ubm = _toy_ubm(key, C, D)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (F, D))
+    pre = U.full_precisions(ubm)
+    for mode in ("dense", "sparse"):
+        post = AL.align_frames(x, ubm, ubm.to_diag(), top_k=4, floor=0.99,
+                               precomp=pre, rescore=mode)
+        sums = np.asarray(jnp.sum(post.values, axis=1))
+        np.testing.assert_allclose(sums, np.ones(F), rtol=1e-5)
+        # exactly one surviving component per frame at this floor
+        assert (np.asarray((post.values > 0).sum(axis=1)) == 1).all()
+
+
+def test_sparse_rescore_loglik_values_match_dense_gather():
+    """The rescored [F, K] logliks themselves (not just the posteriors)
+    agree between ubm.full_rescore and dense full_loglik + gather."""
+    key = jax.random.fold_in(KEY, 41)
+    C, D, F, K = 8, 5, 24, 3
+    ubm = _toy_ubm(key, C, D)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (F, D))
+    pre = U.full_precisions(ubm)
+    _, sel = AL.preselect(ubm.to_diag(), x, K)
+    sparse = U.full_rescore(ubm, x, sel, precomp=pre)
+    dense = jnp.take_along_axis(U.full_loglik(ubm, x, precomp=pre), sel,
+                                axis=1)
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -53,6 +53,68 @@ def test_gmm_loglik_ragged_shapes(F, C, bf, bc):
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 
+def _spd_precisions(key, C, D):
+    const = jax.random.normal(jax.random.fold_in(key, 0), (C,), jnp.float32)
+    lin = jax.random.normal(jax.random.fold_in(key, 1), (D, C), jnp.float32)
+    A = jax.random.normal(jax.random.fold_in(key, 2), (C, D, D)) * 0.3
+    P = (jnp.einsum("cij,ckj->cik", A, A) + jnp.eye(D)).reshape(C, D * D)
+    return const, lin, P
+
+
+@pytest.mark.parametrize("F,D,C,K,bf", [
+    (64, 8, 32, 5, 8),
+    (128, 12, 64, 20, 16),
+    (40, 6, 16, 16, 8),     # K == C: rescore everything
+])
+def test_gmm_rescore(F, D, C, K, bf):
+    """Fused gather-and-rescore (interpret) == oracle == dense-then-gather."""
+    x = jax.random.normal(k(30), (F, D))
+    const, lin, P = _spd_precisions(k(31), C, D)
+    sel = jax.random.randint(k(32), (F, K), 0, C)
+    want = ref.gmm_rescore(x, sel, const, lin, P)
+    dense_gather = jnp.take_along_axis(
+        ref.gmm_loglik(x, const, lin, P), sel, axis=1)
+    with ops.use_pallas(True):
+        got = ops.gmm_rescore(x, sel, const, lin, P, block_f=bf)
+    assert got.shape == (F, K)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got, dense_gather, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("F,bf", [(37, 8), (5, 8), (61, 16)])
+def test_gmm_rescore_ragged_frames(F, bf):
+    """Ragged F (serving traffic) is padded to the frame-tile and sliced
+    back; duplicate and boundary component ids are legal."""
+    D, C, K = 7, 24, 6
+    x = jax.random.normal(k(33), (F, D))
+    const, lin, P = _spd_precisions(k(34), C, D)
+    sel = jnp.concatenate([
+        jnp.zeros((F, 2), jnp.int32),                    # duplicates
+        jnp.full((F, 1), C - 1, jnp.int32),              # boundary
+        jax.random.randint(k(35), (F, K - 3), 0, C),
+    ], axis=1)
+    want = ref.gmm_rescore(x, sel, const, lin, P)
+    with ops.use_pallas(True):
+        got = ops.gmm_rescore(x, sel, const, lin, P, block_f=bf)
+    assert got.shape == (F, K)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_gmm_rescore_cached_pack_matches():
+    """The serving-cached packed gather matrix (``ref.rescore_pack``) is
+    just a layout change: same result as packing on the fly."""
+    F, D, C, K = 32, 6, 16, 4
+    x = jax.random.normal(k(36), (F, D))
+    const, lin, P = _spd_precisions(k(37), C, D)
+    sel = jax.random.randint(k(38), (F, K), 0, C)
+    pack = ref.rescore_pack(const, lin, P)
+    assert pack.shape == (C, 1 + D + D * D)
+    with ops.use_pallas(True):
+        a = ops.gmm_rescore(x, sel, const, lin, P)
+        b = ops.gmm_rescore(x, sel, const, lin, P, pack=pack)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
 @pytest.mark.parametrize("F,D,C", [(256, 8, 32), (512, 16, 64)])
 def test_bw_stats(F, D, C):
     x = jax.random.normal(k(5), (F, D))

@@ -45,6 +45,26 @@ def test_pack_unpack_symmetric(seed, R):
 
 
 @settings(**CONFIG)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.integers(1, 12))
+def test_gmm_rescore_equals_dense_gather(seed, D, K):
+    """Sparse gather-and-rescore == dense scoring followed by gather, for
+    any (D, K) including K == C, with duplicate selected ids."""
+    C = 12
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (20, D))
+    const = jax.random.normal(jax.random.fold_in(k, 1), (C,))
+    lin = jax.random.normal(jax.random.fold_in(k, 2), (D, C))
+    A = jax.random.normal(jax.random.fold_in(k, 3), (C, D, D)) * 0.4
+    P = (jnp.einsum("cij,ckj->cik", A, A) + jnp.eye(D)).reshape(C, D * D)
+    sel = jax.random.randint(jax.random.fold_in(k, 4), (20, K), 0, C)
+    want = jnp.take_along_axis(ref.gmm_loglik(x, const, lin, P), sel,
+                               axis=1)
+    got = ref.gmm_rescore(x, sel, const, lin, P)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**CONFIG)
 @given(st.integers(0, 10_000))
 def test_plda_scores_symmetric_in_speaker_swap(seed):
     """Two-covariance LLR is symmetric: score(x, y) == score(y, x)."""

@@ -77,8 +77,10 @@ def test_hlo_walker_counts_trip_counts():
     r = analyze_hlo(compiled.as_text())
     want = 2 * 64 * 64 * 64 * 9  # 9 iterations of a 64^3 matmul
     assert abs(r["flops"] - want) / want < 0.05, r["flops"]
-    raw = compiled.cost_analysis()["flops"]
-    assert raw < r["flops"] / 4  # XLA's counter misses the trip count
+    raw = compiled.cost_analysis()
+    if isinstance(raw, (list, tuple)):   # older jax returns [dict]
+        raw = raw[0]
+    assert raw["flops"] < r["flops"] / 4  # XLA's counter misses trip count
 
 
 def test_roofline_report_fields():
