@@ -40,6 +40,13 @@ def main() -> None:
                  f"hlo_flop_ratio={po['hlo_flop_ratio_dense_over_sparse']:.1f}"
                  f";x_realtime_dense={po['dense']['x_realtime']:.0f}"
                  f";x_realtime_sparse={po['sparse']['x_realtime']:.0f}"))
+    te = speed.tvm_estep_compare(C=64, D=12, R=32, Utt=64)
+    rows.append((
+        "speed/tvm_estep", "",
+        f"contraction_flop_ratio="
+        f"{te['contraction_hlo_flop_ratio_dense_over_packed']:.2f}"
+        f";mem_ratio={te['memory']['ratio_dense_over_packed']:.2f}"
+        f";bf16_rel_err={te['max_rel_diff_bf16_vs_f32']:.1e}"))
 
     # --- roofline table (deliverable g; from dry-run artifacts) ------------
     from benchmarks import roofline_table

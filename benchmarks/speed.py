@@ -208,6 +208,114 @@ def posterior_compare(C=256, D=20, K=16, F=4096, seed=0):
     return out
 
 
+def tvm_estep_compare(C=256, D=20, R=128, Utt=256, seed=0):
+    """DESIGN.md §9: dense vs packed-symmetric TVM E-step.
+
+    Isolates the two dominant contractions (L-assembly ``n @ U`` and
+    A-accumulation ``nᵀ @ PP``) for the headline HLO-FLOP ratio
+    (analytically 2R/(R+1), ≈2x at R=128), then times the full
+    ``em_accumulate`` both ways plus the bf16-input mixed-precision
+    variant, and reports the analytic bytes of the symmetric operands.
+    Wall numbers are CPU-backend; FLOP/byte ratios are the portable
+    signal (the compiled Pallas kernels realise them on TPU).
+    """
+    from repro.analysis.hlo_cost import analyze_hlo
+
+    key = jax.random.PRNGKey(seed)
+    ubm = _synthetic_full_ubm(key, C, D)
+    model = TV.init_model(jax.random.fold_in(key, 1), ubm.means, ubm.covs,
+                          R, "augmented", 100.0)
+    n = jax.random.uniform(jax.random.fold_in(key, 2), (Utt, C),
+                           minval=0.1, maxval=5.0)
+    f = jax.random.normal(jax.random.fold_in(key, 3), (Utt, C, D))
+    P = R * (R + 1) // 2
+    pre_d = TV.precompute(model, estep="dense")
+    pre_p = TV.precompute(model, estep="packed")
+    out = {"config": {"n_components": C, "feat_dim": D, "rank": R,
+                      "packed_dim": P, "utts": Utt},
+           "paper_claims": {"em_speedup_vs_kaldi_cpu": 25},
+           "analytic_contraction_flop_ratio": (R * R) / P}
+
+    # -- the two dominant contractions in isolation ------------------------
+    from repro.kernels import ops as OPS
+    phi, Phi = TV.posterior(model, pre_d, n, f)
+    PP = Phi + phi[:, :, None] * phi[:, None, :]
+    PPp = OPS.pack_symmetric(PP)
+
+    def dense_contraction(n_, U_, PP_):
+        L = jnp.einsum("uc,crs->urs", n_, U_)
+        A = jnp.einsum("uc,urs->crs", n_, PP_)
+        return L, A
+
+    def packed_contraction(n_, Up_, PPp_):
+        return OPS.tvm_estep_l(n_, Up_), OPS.tvm_estep_a(n_, PPp_)
+
+    rows = {}
+    for name, fn, args in (
+            ("dense", dense_contraction, (n, pre_d.U, PP)),
+            ("packed", packed_contraction, (n, pre_p.U, PPp))):
+        compiled = jax.jit(fn).lower(*args).compile()
+        t = _timeit(compiled, *args)
+        hlo = analyze_hlo(compiled.as_text())
+        rows[name] = {"seconds_per_call": t, "hlo_flops": hlo["flops"],
+                      "hlo_bytes": hlo["bytes"]}
+    out["contractions"] = rows
+    out["contraction_hlo_flop_ratio_dense_over_packed"] = (
+        rows["dense"]["hlo_flops"] / rows["packed"]["hlo_flops"])
+
+    # -- the full E-step accumulate (posterior solve included) -------------
+    full = {}
+    accs = {}
+    for name, pre, dt in (("dense", pre_d, "float32"),
+                          ("packed", pre_p, "float32"),
+                          ("packed_bf16", pre_p, "bfloat16")):
+        fn = jax.jit(lambda n_, f_, pre=pre, dt=dt: TV.em_accumulate(
+            model, pre, n_, f_, estep_dtype=dt))
+        compiled = fn.lower(n, f).compile()
+        t = _timeit(compiled, n, f)
+        hlo = analyze_hlo(compiled.as_text())
+        accs[name] = compiled(n, f)
+        full[name] = {"seconds_per_call": t, "hlo_flops": hlo["flops"],
+                      "hlo_bytes": hlo["bytes"]}
+    out["full_estep"] = full
+    out["full_estep_hlo_flop_ratio_dense_over_packed"] = (
+        full["dense"]["hlo_flops"] / full["packed"]["hlo_flops"])
+    A_d = np.asarray(accs["dense"].A)
+    A_p = np.asarray(OPS.unpack_symmetric(accs["packed"].A, R))
+    A_b = np.asarray(OPS.unpack_symmetric(accs["packed_bf16"].A, R))
+    scale = np.abs(A_d).max()
+    out["max_rel_diff_packed_vs_dense"] = float(
+        np.abs(A_p - A_d).max() / scale)
+    out["max_rel_diff_bf16_vs_f32"] = float(np.abs(A_b - A_p).max() / scale)
+
+    # -- analytic symmetric-operand memory (U_c + PP_u + A_c per batch) ----
+    sym_elems = C + Utt + C   # count of symmetric [R, R] operands
+    dense_bytes = 4 * sym_elems * R * R
+    packed_bytes = 4 * sym_elems * P
+    bf16_bytes = 2 * (C + Utt) * P + 4 * C * P  # bf16 inputs, f32 accum
+    out["memory"] = {
+        "dense_symmetric_operand_bytes": int(dense_bytes),
+        "packed_symmetric_operand_bytes": int(packed_bytes),
+        "packed_bf16_symmetric_operand_bytes": int(bf16_bytes),
+        "ratio_dense_over_packed": dense_bytes / packed_bytes,
+        "ratio_dense_over_packed_bf16": dense_bytes / bf16_bytes,
+    }
+    return out
+
+
+def run_tvm_estep(smoke: bool = False, out_path=None):
+    """The `tvm_estep` bench case: writes ``BENCH_tvm_estep.json`` at the
+    repo root (CI runs the smoke scale so artifact generation can't
+    silently rot; the committed artifact is the full R=128 run)."""
+    kw = (dict(C=32, D=8, R=16, Utt=48) if smoke
+          else dict(C=256, D=20, R=128, Utt=256))
+    r = tvm_estep_compare(**kw)
+    r["smoke"] = smoke
+    p = Path(out_path) if out_path else REPO_ROOT / "BENCH_tvm_estep.json"
+    p.write_text(json.dumps(r, indent=2) + "\n")
+    return r
+
+
 def run_posterior(smoke: bool = False, out_path=None):
     """The `posterior` bench case: writes the machine-readable perf
     trajectory point ``BENCH_posterior.json`` at the repo root (CI runs
@@ -284,6 +392,9 @@ def run():
 if __name__ == "__main__":
     if "posterior" in sys.argv[1:]:
         r = run_posterior(smoke="--smoke" in sys.argv[1:])
+        print(json.dumps(r, indent=2))
+    elif "tvm_estep" in sys.argv[1:]:
+        r = run_tvm_estep(smoke="--smoke" in sys.argv[1:])
         print(json.dumps(r, indent=2))
     else:
         r = run()

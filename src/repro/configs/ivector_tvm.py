@@ -38,6 +38,18 @@ class IVectorConfig:
     #   'dense'  - score all C densely and gather (vec-trick matmul);
     #              the CPU/reference fallback, wins at small C
     rescore: str = "sparse"
+    # TVM E-step linear-algebra layout (DESIGN.md §9):
+    #   'packed' - symmetric operands (U_c, Phi+φφᵀ, A_c) live as their
+    #              packed upper triangles (P = R(R+1)/2) end to end,
+    #              unpacking only at the Cholesky/solve boundaries: ~2x
+    #              fewer HBM bytes and MXU FLOPs on the two dominant
+    #              E-step contractions (kernels/tvm_estep.py)
+    #   'dense'  - full [R, R] operands; the reference fallback
+    estep: str = "packed"
+    # input dtype of the packed E-step contractions ('float32' |
+    # 'bfloat16'); accumulation is ALWAYS f32 (preferred_element_type) —
+    # bf16 halves the contraction's HBM traffic again on TPU
+    estep_dtype: str = "float32"
     # training-batch geometry for the distributed EM step. The paper's GPU
     # processed one small batch; a 256-chip pod weak-scales the E-step:
     # 8192 utts/macro-step (32/chip) amortizes the fixed [C,R,R] accumulator

@@ -164,17 +164,22 @@ class TVMAccum:
 
     ``center_means`` (standard formulation) centres each chunk's
     first-order stats around the UBM means before the posterior solve.
+    A packed ``pre`` (DESIGN.md §9) carries the A accumulator packed
+    through the whole stream; ``estep_dtype`` selects the contraction
+    input precision (bf16 inputs, f32 accumulation).
     """
 
     def __init__(self, model: TV.TVModel, pre: TV.Precomp,
-                 center_means=None):
+                 center_means=None, estep_dtype: str = "float32"):
         self.model = model
         self.pre = pre
         self.center_means = center_means
+        self.estep_dtype = estep_dtype
 
     def init(self):
         C, D, R = self.model.T.shape
-        return TV.EMAccum.zeros(C, D, R)
+        return TV.EMAccum.zeros(
+            C, D, R, estep="packed" if self.pre.packed else "dense")
 
     def update(self, carry, chunk: ChunkStats):
         n, f = chunk.n, chunk.f
@@ -182,7 +187,8 @@ class TVMAccum:
             st = ST.center(ST.BWStats(n, f, None), self.center_means)
             n, f = st.n, st.f
         return TV.merge_accums(
-            carry, TV.em_accumulate(self.model, self.pre, n, f))
+            carry, TV.em_accumulate(self.model, self.pre, n, f,
+                                    estep_dtype=self.estep_dtype))
 
     def finalize(self, carry) -> TV.EMAccum:
         return carry

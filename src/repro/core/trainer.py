@@ -86,9 +86,10 @@ def make_em_fn(cfg: IVectorConfig):
             n_, f_, S_ = st.n, st.f, st.S
         else:
             n_, f_, S_ = n, f, S_tot
-        pre = TV.precompute(model)
+        pre = TV.precompute(model, estep=cfg.estep)
         acc = TV.em_accumulate_scan(model, pre, n_, f_,
-                                    chunk=cfg.estep_chunk)
+                                    chunk=cfg.estep_chunk,
+                                    estep_dtype=cfg.estep_dtype)
         model = TV.m_step(model, acc, S_ if cfg.update_sigma else None,
                           cfg.update_sigma)
         if cfg.min_divergence:
@@ -113,10 +114,11 @@ def make_iter_fn(cfg: IVectorConfig):
 
     def iter_fn(model: TV.TVModel, ubm: U.FullGMM, feats, mask=None):
         pack = EN.pack_ubm(ubm)
-        pre = TV.precompute(model)
+        pre = TV.precompute(model, estep=cfg.estep)
         center = model.means if model.formulation == "standard" else None
         accums = (EN.TotalsAccum(spec, feats.shape[-1]),
-                  EN.TVMAccum(model, pre, center_means=center))
+                  EN.TVMAccum(model, pre, center_means=center,
+                              estep_dtype=cfg.estep_dtype))
         (tot, acc), _ = EN.stream(spec, pack, feats, mask, accums)
         S_m = None
         if cfg.update_sigma:
@@ -277,5 +279,6 @@ def extract(cfg: IVectorConfig, state: TrainState, feats,
         n_, f_ = stc.n, stc.f
     else:
         n_, f_ = st.n, st.f
-    pre = TV.precompute(model)
-    return TV.extract_ivectors(model, pre, n_, f_)
+    pre = TV.precompute(model, estep=cfg.estep)
+    return TV.extract_ivectors(model, pre, n_, f_,
+                               estep_dtype=cfg.estep_dtype)

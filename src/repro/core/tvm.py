@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.stats import BWStats
+from repro.kernels import ops
 
 f32 = jnp.float32
 COV_FLOOR = 1e-4
@@ -61,37 +62,72 @@ def init_model(key, ubm_means, ubm_covs, R: int, formulation: str,
 
 
 class Precomp(NamedTuple):
-    U: jax.Array    # [C, R, R]  T^T Σ^{-1} T
+    U: jax.Array    # [C, R, R] T^T Σ^{-1} T; packed mode: [C, P] triu
     Pj: jax.Array   # [C, D, R]  Σ^{-1} T
 
+    @property
+    def packed(self) -> bool:
+        """Packed-symmetric E-step layout (DESIGN.md §9): U holds only
+        the upper triangle, P = R(R+1)/2."""
+        return self.U.ndim == 2
 
-def precompute(model: TVModel) -> Precomp:
-    SigInv = jnp.linalg.inv(model.Sigma)
-    Pj = jnp.einsum("cde,cer->cdr", SigInv, model.T)
+
+def precompute(model: TVModel, estep: str = "dense") -> Precomp:
+    """T^T Σ^{-1} T and Σ^{-1} T via a Cholesky solve against T (never
+    an explicit inverse — near-singular residual covariances would
+    poison Pj/U through `inv`; `cho_solve` stays backward-stable).
+
+    ``estep='packed'`` stores U as its packed upper triangle [C, P]
+    (DESIGN.md §9); ``'dense'`` keeps the full [C, R, R] reference
+    layout.
+    """
+    if estep not in ("dense", "packed"):
+        raise ValueError(f"estep must be 'dense'|'packed', got {estep!r}")
+    chol = jnp.linalg.cholesky(model.Sigma)
+    Pj = jax.scipy.linalg.cho_solve((chol, True), model.T)
     Uc = jnp.einsum("cdr,cds->crs", model.T, Pj)
+    # exact symmetry before packing (fp round-off from the solve)
+    Uc = 0.5 * (Uc + Uc.transpose(0, 2, 1))
+    if estep == "packed":
+        return Precomp(ops.pack_symmetric(Uc).astype(f32), Pj.astype(f32))
     return Precomp(Uc.astype(f32), Pj.astype(f32))
 
 
-def posterior(model: TVModel, pre: Precomp, n, f
-              ) -> Tuple[jax.Array, jax.Array]:
-    """n: [U, C], f: [U, C, D] -> (phi [U, R], Phi [U, R, R]).
+def posterior(model: TVModel, pre: Precomp, n, f, mean_only: bool = False,
+              estep_dtype: str = "float32"
+              ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """n: [U, C], f: [U, C, D] -> (phi [U, R], Phi [U, R, R] | None).
 
     Stats must be centred for the standard formulation and raw for the
     augmented one (paper §2 convention).
+
+    With a packed ``pre`` the precision assembly runs on the upper
+    triangle (``ops.tvm_estep_l``, optionally bf16 inputs with f32
+    accumulation per ``estep_dtype``) and unpacks ONLY at this batched
+    Cholesky boundary. ``mean_only=True`` solves just the rhs (R× fewer
+    triangular solves than the identity-RHS covariance solve) and
+    returns ``Phi=None`` — the extraction/serving scoring path.
     """
     R = model.rank
-    L = jnp.eye(R, dtype=f32) + jnp.einsum("uc,crs->urs", n, pre.U)
+    if pre.packed:
+        Lp = ops.tvm_estep_l(n, pre.U, dtype=estep_dtype)      # [U, P]
+        L = jnp.eye(R, dtype=f32) + ops.unpack_symmetric(Lp, R)
+    else:
+        L = jnp.eye(R, dtype=f32) + jnp.einsum("uc,crs->urs", n, pre.U)
     rhs = model.prior[None] + jnp.einsum("cdr,ucd->ur", pre.Pj, f)
     chol = jnp.linalg.cholesky(L)
+    phi = jax.scipy.linalg.cho_solve((chol, True), rhs[..., None])[..., 0]
+    if mean_only:
+        return phi.astype(f32), None
     Phi = jax.scipy.linalg.cho_solve(
         (chol, True), jnp.broadcast_to(jnp.eye(R, dtype=f32),
                                        (n.shape[0], R, R)))
-    phi = jax.scipy.linalg.cho_solve((chol, True), rhs[..., None])[..., 0]
     return phi.astype(f32), Phi.astype(f32)
 
 
 class EMAccum(NamedTuple):
-    A: jax.Array        # [C, R, R]  Σ_u n_uc (Phi_u + phi phi^T)
+    A: jax.Array        # [C, R, R]  Σ_u n_uc (Phi_u + phi phi^T);
+    #                     packed mode: [C, P] upper triangle
     B: jax.Array        # [C, D, R]  Σ_u f_uc ⊗ phi_u
     h: jax.Array        # [R]        Σ_u phi_u
     H: jax.Array        # [R, R]     Σ_u (Phi_u + phi phi^T)
@@ -99,21 +135,37 @@ class EMAccum(NamedTuple):
     n_utts: jax.Array   # []
 
     @staticmethod
-    def zeros(C: int, D: int, R: int) -> "EMAccum":
-        """Identity element of ``merge_accums`` (scan/stream carries)."""
+    def zeros(C: int, D: int, R: int, estep: str = "dense") -> "EMAccum":
+        """Identity element of ``merge_accums`` (scan/stream carries).
+        ``estep='packed'`` sizes A as the packed triangle [C, P]."""
+        A0 = (jnp.zeros((C, R * (R + 1) // 2), f32) if estep == "packed"
+              else jnp.zeros((C, R, R), f32))
         return EMAccum(
-            A=jnp.zeros((C, R, R), f32), B=jnp.zeros((C, D, R), f32),
+            A=A0, B=jnp.zeros((C, D, R), f32),
             h=jnp.zeros((R,), f32), H=jnp.zeros((R, R), f32),
             n_tot=jnp.zeros((C,), f32), n_utts=jnp.zeros((), f32))
 
 
-def em_accumulate(model: TVModel, pre: Precomp, n, f) -> EMAccum:
-    """One minibatch of utterance stats -> E-step accumulators."""
-    phi, Phi = posterior(model, pre, n, f)
+def em_accumulate(model: TVModel, pre: Precomp, n, f,
+                  estep_dtype: str = "float32") -> EMAccum:
+    """One minibatch of utterance stats -> E-step accumulators.
+
+    Packed ``pre`` keeps the symmetric operands packed END TO END: the
+    per-utterance second moment Phi + φφᵀ is packed once [U, P] and both
+    the A-accumulation (``ops.tvm_estep_a``) and the tiny H reduction
+    consume the packed form — A is stored packed until the M-step solve.
+    """
+    phi, Phi = posterior(model, pre, n, f, estep_dtype=estep_dtype)
     PP = Phi + phi[:, :, None] * phi[:, None, :]
-    A = jnp.einsum("uc,urs->crs", n, PP)
+    if pre.packed:
+        PPp = ops.pack_symmetric(PP)                           # [U, P]
+        A = ops.tvm_estep_a(n, PPp, dtype=estep_dtype)         # [C, P]
+        H = ops.unpack_symmetric(jnp.sum(PPp, axis=0), model.rank)
+    else:
+        A = jnp.einsum("uc,urs->crs", n, PP)
+        H = jnp.sum(PP, axis=0)
     B = jnp.einsum("ucd,ur->cdr", f, phi)
-    return EMAccum(A=A, B=B, h=jnp.sum(phi, axis=0), H=jnp.sum(PP, axis=0),
+    return EMAccum(A=A, B=B, h=jnp.sum(phi, axis=0), H=H,
                    n_tot=jnp.sum(n, axis=0),
                    n_utts=jnp.asarray(n.shape[0], f32))
 
@@ -123,7 +175,8 @@ def merge_accums(a: EMAccum, b: EMAccum) -> EMAccum:
 
 
 def em_accumulate_scan(model: TVModel, pre: Precomp, n, f,
-                       chunk: int = 512) -> EMAccum:
+                       chunk: int = 512,
+                       estep_dtype: str = "float32") -> EMAccum:
     """Chunked E-step: scans utterance sub-batches so the per-utterance
     posterior covariances ([chunk, R, R], not [U, R, R]) never exist all at
     once — at pod-scale batches the unchunked form is terabytes.
@@ -140,16 +193,17 @@ def em_accumulate_scan(model: TVModel, pre: Precomp, n, f,
 
     def body(carry, inp):
         nc, fc = inp
-        acc = em_accumulate(model, pre, nc, fc)
+        acc = em_accumulate(model, pre, nc, fc, estep_dtype=estep_dtype)
         return merge_accums(carry, acc), None
 
-    zero = EMAccum.zeros(C, D, R)
+    zero = EMAccum.zeros(C, D, R, estep="packed" if pre.packed else "dense")
     nr = n[:g * chunk].reshape(g, chunk, C)
     fr = f[:g * chunk].reshape(g, chunk, C, D)
     acc, _ = jax.lax.scan(body, zero, (nr, fr))
     if rem:
         acc = merge_accums(
-            acc, em_accumulate(model, pre, n[g * chunk:], f[g * chunk:]))
+            acc, em_accumulate(model, pre, n[g * chunk:], f[g * chunk:],
+                               estep_dtype=estep_dtype))
     return acc
 
 
@@ -160,10 +214,14 @@ def em_accumulate_scan(model: TVModel, pre: Precomp, n, f,
 
 def m_step(model: TVModel, acc: EMAccum, S_tot: Optional[jax.Array],
            update_sigma: bool) -> TVModel:
-    """T update (and Σ update) from accumulated statistics [Kenny 2005]."""
+    """T update (and Σ update) from accumulated statistics [Kenny 2005].
+
+    A packed accumulator ([C, P]) is unpacked here — the batched-solve
+    boundary — exactly as L unpacks at the Cholesky boundary."""
     R = model.rank
+    A = ops.unpack_symmetric(acc.A, R) if acc.A.ndim == 2 else acc.A
     # T_c = B_c A_c^{-1}; solve A_c^T X^T = B_c^T  (A symmetric)
-    A_reg = acc.A + 1e-6 * jnp.eye(R, dtype=f32)[None]
+    A_reg = A + 1e-6 * jnp.eye(R, dtype=f32)[None]
     T_new = jnp.linalg.solve(A_reg, acc.B.transpose(0, 2, 1)) \
         .transpose(0, 2, 1)
     Sigma = model.Sigma
@@ -232,7 +290,14 @@ def updated_ubm_means(model: TVModel) -> jax.Array:
     return model.means
 
 
-def extract_ivectors(model: TVModel, pre: Precomp, n, f) -> jax.Array:
-    """Posterior means, centred at the prior offset (Kaldi convention)."""
-    phi, _ = posterior(model, pre, n, f)
+def extract_ivectors(model: TVModel, pre: Precomp, n, f,
+                     estep_dtype: str = "float32") -> jax.Array:
+    """Posterior means, centred at the prior offset (Kaldi convention).
+
+    Extraction only needs the mean, so this takes the ``mean_only``
+    posterior path: the [U, R, R] covariance (an identity-RHS solve that
+    serving used to compute and discard) is never formed — R× fewer
+    triangular solves per extraction."""
+    phi, _ = posterior(model, pre, n, f, mean_only=True,
+                       estep_dtype=estep_dtype)
     return phi - model.prior[None]

@@ -95,11 +95,75 @@ def bw_stats(gamma, x, **kw):
     return ref.bw_stats(gamma, x)
 
 
-def packed_symmetric_accumulate(n, U_packed, **kw):
+def _estep_cast(a, b, dtype):
+    """Mixed-precision knob for the packed E-step contractions: bf16
+    INPUTS, f32 accumulation (both the kernels and the jnp references
+    contract with ``preferred_element_type=f32``)."""
+    if dtype in ("bfloat16", "bf16"):
+        return a.astype(jnp.bfloat16), b.astype(jnp.bfloat16)
+    if dtype not in ("float32", "f32"):
+        raise ValueError(
+            f"estep dtype must be 'float32'|'bfloat16', got {dtype!r}")
+    return a.astype(jnp.float32), b.astype(jnp.float32)
+
+
+def _pad_matmul(a, b, bm, bp, bk):
+    """Zero-pad a [M, K] @ b [K, P] operands to block multiples. Zero
+    rows/cols are exact for a sum-reduction: padding never escapes."""
+    M, K = a.shape
+    P = b.shape[1]
+    Mp, Kp, Pp = _ceil_to(M, bm), _ceil_to(K, bk), _ceil_to(P, bp)
+    if (Mp, Kp) != (M, K):
+        a = jnp.pad(a, ((0, Mp - M), (0, Kp - K)))
+    if (Kp, Pp) != (K, P):
+        b = jnp.pad(b, ((0, Kp - K), (0, Pp - P)))
+    return a, b
+
+
+def tvm_estep_l(n, U_packed, *, dtype: str = "float32", **kw):
+    """Packed L-assembly: n [U, C] @ U_packed [C, P] -> [U, P] f32.
+
+    ``dtype`` selects the contraction input precision ('float32' |
+    'bfloat16'); accumulation is always f32. Ragged U/C/P (any rank R —
+    odd P included) are zero-padded to the kernel's block multiples and
+    sliced back, mirroring ``gmm_loglik``.
+    """
+    n, U_packed = _estep_cast(n, U_packed, dtype)
     if _USE_PALLAS.get():
-        return _te.packed_symmetric_accumulate(
-            n, U_packed, interpret=_INTERPRET.get(), **kw)
-    return ref.packed_symmetric_accumulate(n, U_packed)
+        U, C = n.shape
+        P = U_packed.shape[1]
+        bu = min(kw.get("block_u", _te.BLOCK_U), U)
+        bp = min(kw.get("block_p", _te.BLOCK_P), P)
+        bc = min(kw.get("block_c", _te.BLOCK_C), C)
+        np_, Up_ = _pad_matmul(n, U_packed, bu, bp, bc)
+        out = _te.tvm_estep_l(np_, Up_, interpret=_INTERPRET.get(), **kw)
+        return out[:U, :P] if out.shape != (U, P) else out
+    return ref.tvm_estep_l(n, U_packed)
+
+
+def tvm_estep_a(n, PP_packed, *, dtype: str = "float32", **kw):
+    """Packed A-accumulation: nᵀ [C, U] @ PP_packed [U, P] -> [C, P] f32.
+
+    Same mixed-precision and pad-and-clip contract as ``tvm_estep_l``
+    (the reduction here is over utterances, so zero-padded utterance rows
+    contribute exactly nothing).
+    """
+    n, PP_packed = _estep_cast(n, PP_packed, dtype)
+    if _USE_PALLAS.get():
+        U, C = n.shape
+        P = PP_packed.shape[1]
+        bu = min(kw.get("block_u", _te.BLOCK_U), U)
+        bp = min(kw.get("block_p", _te.BLOCK_P), P)
+        bc = min(kw.get("block_c", _te.BLOCK_C), C)
+        Cp, Up = _ceil_to(C, bc), _ceil_to(U, bu)
+        Pp = _ceil_to(P, bp)
+        if (Up, Cp) != (U, C):
+            n = jnp.pad(n, ((0, Up - U), (0, Cp - C)))
+        if (Up, Pp) != (U, P):
+            PP_packed = jnp.pad(PP_packed, ((0, Up - U), (0, Pp - P)))
+        out = _te.tvm_estep_a(n, PP_packed, interpret=_INTERPRET.get(), **kw)
+        return out[:C, :P] if out.shape != (C, P) else out
+    return ref.tvm_estep_a(n, PP_packed)
 
 
 def flash_attention(q, k, v, **kw):

@@ -72,32 +72,59 @@ def bw_stats(gamma, x):
     return n.astype(f32), f.astype(f32), S.astype(f32)
 
 
-def packed_symmetric_accumulate(n, U_packed):
-    """TVM E-step precision accumulation with symmetric packing.
+def tvm_estep_l(n, U_packed):
+    """TVM E-step L-assembly with symmetric packing (DESIGN.md §9).
 
     n: [U, C] occupancies; U_packed: [C, P] where P = R(R+1)/2 holds the
-    upper triangle of T_c^T Sigma_c^{-1} T_c. Returns [U, P] — the packed
-    L_u (before adding I). Packing halves both HBM bytes and matmul FLOPs
-    versus the dense [C, R, R] form.
+    upper triangle of T_c^T Sigma_c^{-1} T_c. Returns [U, P] f32 — the
+    packed L_u (before adding I). Packing halves both HBM bytes and
+    matmul FLOPs versus the dense [C, R, R] form. bf16 inputs accumulate
+    in f32 (``preferred_element_type``), same contract as the kernel.
     """
     return jnp.dot(n, U_packed, preferred_element_type=f32).astype(f32)
 
 
+def tvm_estep_a(n, PP_packed):
+    """TVM E-step A-accumulation with symmetric packing.
+
+    n: [U, C] occupancies; PP_packed: [U, P] packed per-utterance second
+    moments Phi_u + φ_u φ_uᵀ. Returns [C, P] f32 — the packed M-step
+    operand A_c = Σ_u n_uc (Phi_u + φ_u φ_uᵀ).
+    """
+    return jnp.dot(n.T, PP_packed, preferred_element_type=f32).astype(f32)
+
+
+def _packed_index_map(R):
+    """[R, R] int32 map (r, s) -> row-major upper-triangle packed index,
+    computed arithmetically (no scatter): for r <= s,
+    idx = r*R - r(r-1)/2 + (s-r), mirrored for the lower triangle."""
+    i = jnp.arange(R, dtype=jnp.int32)
+    r = jnp.minimum(i[:, None], i[None, :])
+    s = jnp.maximum(i[:, None], i[None, :])
+    return r * R - (r * (r - 1)) // 2 + (s - r)
+
+
 def pack_symmetric(M):
-    """[..., R, R] -> [..., R(R+1)/2] upper triangle (row-major)."""
+    """[..., R, R] -> [..., R(R+1)/2] upper triangle (row-major).
+
+    Vectorised flat gather — lowers to one take, no boolean masking.
+    """
     R = M.shape[-1]
     iu = jnp.triu_indices(R)
-    return M[..., iu[0], iu[1]]
+    flat = (iu[0] * R + iu[1]).astype(jnp.int32)
+    return jnp.take(M.reshape(M.shape[:-2] + (R * R,)), flat, axis=-1)
 
 
 def unpack_symmetric(Mp, R):
-    """[..., R(R+1)/2] -> [..., R, R] symmetric."""
-    iu = jnp.triu_indices(R)
-    out = jnp.zeros(Mp.shape[:-1] + (R, R), Mp.dtype)
-    out = out.at[..., iu[0], iu[1]].set(Mp)
-    outT = jnp.swapaxes(out, -1, -2)
-    diag = out * jnp.eye(R, dtype=Mp.dtype)
-    return out + outT - diag
+    """[..., R(R+1)/2] -> [..., R, R] symmetric.
+
+    A pure gather through the arithmetic (r, s) -> packed-index map:
+    both triangles read the same packed entry, so the result is exactly
+    symmetric (no scatter + transpose + diagonal fix-up).
+    """
+    idx = _packed_index_map(R).reshape(-1)
+    out = jnp.take(Mp, idx, axis=-1)
+    return out.reshape(Mp.shape[:-1] + (R, R))
 
 
 def flash_attention(q, k, v, causal: bool = True):

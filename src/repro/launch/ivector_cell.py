@@ -144,8 +144,12 @@ def em_macro_step(cfg, mesh, ubm_w, ubm_means, ubm_covs, T, Sigma, prior,
     feats = tag(feats, "utts", None, None)
     diag = ubm.to_diag()
     pre_ubm = U.full_precisions(ubm)
-    pre = TV.precompute(model)
-    pre = TV.Precomp(tag(pre.U, "components", None, None),
+    estep = getattr(cfg, "estep", "dense")
+    estep_dtype = getattr(cfg, "estep_dtype", "float32")
+    pre = TV.precompute(model, estep=estep)
+    # packed U is [C, P]: one fewer axis to tag than the dense [C, R, R]
+    pre = TV.Precomp(tag(pre.U, "components", None) if pre.packed
+                     else tag(pre.U, "components", None, None),
                      tag(pre.Pj, "components", None, None))
     C, D, R = cfg.n_components, cfg.feat_dim, cfg.ivector_dim
     Utt = feats.shape[0]
@@ -158,16 +162,17 @@ def em_macro_step(cfg, mesh, ubm_w, ubm_means, ubm_covs, T, Sigma, prior,
                                         cfg.update_sigma)
         n = tag(n, "utts", "components")
         f = tag(f, "utts", "components", None)
-        acc_c = TV.em_accumulate(model, pre, n, f)
+        acc_c = TV.em_accumulate(model, pre, n, f, estep_dtype=estep_dtype)
         acc = TV.merge_accums(acc, acc_c)
         S_tot = S_tot + tag(S_b, "components", None, None)
         return (acc, S_tot), None
 
-    zero = TV.EMAccum.zeros(C, D, R)
+    zero = TV.EMAccum.zeros(C, D, R, estep=estep)
     S0 = jnp.zeros((C, D, D), f32_)
     feats_g = feats.reshape((g, utt_chunk) + feats.shape[1:])
     (acc, S), _ = jax.lax.scan(chunk_body, (zero, S0), feats_g)
-    acc = TV.EMAccum(tag(acc.A, "components", None, None),
+    acc = TV.EMAccum(tag(acc.A, "components", None) if acc.A.ndim == 2
+                     else tag(acc.A, "components", None, None),
                      tag(acc.B, "components", None, None),
                      acc.h, acc.H, acc.n_tot, acc.n_utts)
     return acc, tag(S, "components", None, None)
@@ -217,10 +222,14 @@ def model_flops(cfg, n_utts: int) -> float:
     else:
         align += 2.0 * F * (D * D + D) * C         # dense loglik matmuls
     stats = 2.0 * F * K * (D * D + D)              # sparse accumulation
-    estep_L = 2.0 * n_utts * C * R * R             # n @ U contraction
+    # packed-symmetric E-step (DESIGN.md §9): the two dominant symmetric
+    # contractions run on P = R(R+1)/2 columns instead of R*R
+    RR = (R * (R + 1) / 2.0 if getattr(cfg, "estep", "dense") == "packed"
+          else float(R * R))
+    estep_L = 2.0 * n_utts * C * RR                # n @ U contraction
     estep_rhs = 2.0 * n_utts * C * D * R
     solves = n_utts * (R ** 3) / 3.0 * 2
-    accum = 2.0 * n_utts * C * (R * R + D * R)
+    accum = 2.0 * n_utts * C * (RR + D * R)
     return align + stats + estep_L + estep_rhs + solves + accum
 
 

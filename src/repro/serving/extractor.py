@@ -69,7 +69,10 @@ class IVectorExtractor:
             n_components=cfg.n_components, top_k=cfg.posterior_top_k,
             floor=cfg.posterior_floor, rescore=cfg.rescore)
         self._pack = EN.pack_ubm(ubm)
-        self._tv_pre = TV.precompute(model)
+        # packed-symmetric U (cfg.estep='packed', DESIGN.md §9) halves the
+        # cached precompute's bytes; extraction itself runs the mean-only
+        # posterior (no [B, R, R] covariance solve) via extract_ivectors
+        self._tv_pre = TV.precompute(model, estep=cfg.estep)
         # jit specializes per input shape, so one jitted fn covers every
         # bucket; _seen_buckets tracks which shapes have been compiled
         self._fn = jax.jit(self._extract_batch)
@@ -113,7 +116,8 @@ class IVectorExtractor:
             n_, f_ = stc.n, stc.f
         else:
             n_, f_ = st.n, st.f
-        iv = TV.extract_ivectors(model, tv_pre, n_, f_)
+        iv = TV.extract_ivectors(model, tv_pre, n_, f_,
+                                 estep_dtype=self.cfg.estep_dtype)
         if self.serving.length_norm:
             iv = BK.length_norm(iv)
         # zero-occupancy padding rows extract the prior mean; blank them

@@ -130,16 +130,31 @@ def test_bw_stats(F, D, C):
 
 
 @pytest.mark.parametrize("U,C,R", [(32, 16, 12), (64, 64, 24)])
-def test_tvm_estep_packed(U, C, R):
-    P = R * (R + 1) // 2
+def test_tvm_estep_l_packed(U, C, R):
+    """Packed L-assembly kernel == dense einsum after unpacking."""
     n = jax.random.uniform(k(7), (U, C))
     M = jax.random.normal(k(8), (C, R, R))
     M = M + jnp.swapaxes(M, 1, 2)
     Up = ref.pack_symmetric(M)
     want_dense = jnp.einsum("uc,crs->urs", n, M)
     with ops.use_pallas(True):
-        got_packed = ops.packed_symmetric_accumulate(
-            n, Up, block_u=16, block_p=max(P // 2, 1), block_c=16)
+        got_packed = ops.tvm_estep_l(n, Up, block_u=16, block_p=64,
+                                     block_c=16)
+    got_dense = ref.unpack_symmetric(got_packed, R)
+    np.testing.assert_allclose(got_dense, want_dense, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("U,C,R", [(32, 16, 12), (64, 64, 24)])
+def test_tvm_estep_a_packed(U, C, R):
+    """Packed A-accumulation kernel == dense einsum after unpacking."""
+    n = jax.random.uniform(k(40), (U, C))
+    M = jax.random.normal(k(41), (U, R, R))
+    M = M + jnp.swapaxes(M, 1, 2)
+    PPp = ref.pack_symmetric(M)
+    want_dense = jnp.einsum("uc,urs->crs", n, M)
+    with ops.use_pallas(True):
+        got_packed = ops.tvm_estep_a(n, PPp, block_u=16, block_p=64,
+                                     block_c=16)
     got_dense = ref.unpack_symmetric(got_packed, R)
     np.testing.assert_allclose(got_dense, want_dense, rtol=1e-4, atol=1e-3)
 
@@ -164,11 +179,19 @@ def test_flash_attention(B, S, H, KVH, hd, bq, bk, dtype):
                                atol=tol)
 
 
-def test_pack_unpack_roundtrip():
-    M = jax.random.normal(k(12), (5, 9, 9))
+@pytest.mark.parametrize("R", [1, 2, 5, 9, 16])   # odd + even P tilings
+def test_pack_unpack_roundtrip(R):
+    M = jax.random.normal(k(12), (5, R, R))
     M = M + jnp.swapaxes(M, 1, 2)
+    Mp = ref.pack_symmetric(M)
+    assert Mp.shape == (5, R * (R + 1) // 2)
     np.testing.assert_allclose(
-        ref.unpack_symmetric(ref.pack_symmetric(M), 9), M, rtol=1e-6)
+        ref.unpack_symmetric(Mp, R), M, rtol=1e-6)
+    # unpack is a pure gather: EXACTLY symmetric for arbitrary vectors
+    v = jax.random.normal(k(13), (3, R * (R + 1) // 2))
+    out = ref.unpack_symmetric(v, R)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.swapaxes(out, -1, -2)))
 
 
 @pytest.mark.parametrize("B,T,di,ds,bt,bd", [(2, 64, 32, 8, 32, 16),
