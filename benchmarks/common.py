@@ -6,8 +6,8 @@ import json
 import time
 from pathlib import Path
 
+from repro.api import IVectorRecipe, prepare
 from repro.configs.ivector_tvm import CONFIG as IV_FULL
-from repro.core.pipeline import prepare, run_ensemble, run_variant
 from repro.data.speech import SpeechDataConfig
 
 OUT_DIR = Path(__file__).resolve().parent / "results"
@@ -56,9 +56,9 @@ def cached(name: str, fn):
 
 def ensemble_curves(cfg, n_iters, eval_every, seeds):
     """Average EER curves over random T inits (the paper's methodology);
-    thin adapter over `pipeline.run_ensemble`."""
-    feats, labels, ubm = prepare(cfg, BENCH_DATA, seed=0)
-    r = run_ensemble(cfg, None, seeds, n_iters, eval_every=eval_every,
-                     feats=feats, labels=labels, ubm=ubm)
+    thin adapter over `recipe.ensemble` (repro.api)."""
+    data = prepare(cfg, BENCH_DATA, seed=0)
+    r = IVectorRecipe.from_config(cfg).ensemble(
+        data=data, seeds=seeds, n_iters=n_iters, eval_every=eval_every)
     curves = [r["curves"][str(int(s))] for s in seeds]
     return r["iters"], r["eer_mean"], curves

@@ -47,6 +47,11 @@ def main() -> None:
         f"{te['contraction_hlo_flop_ratio_dense_over_packed']:.2f}"
         f";mem_ratio={te['memory']['ratio_dense_over_packed']:.2f}"
         f";bf16_rel_err={te['max_rel_diff_bf16_vs_f32']:.1e}"))
+    e2e = speed.end2end_recipe()
+    rows.append(("speed/end2end", f"{e2e['seconds'] * 1e6:.0f}",
+                 f"s_per_iter={e2e['seconds_per_iter']:.3f}"
+                 f";eer={e2e['eer']:.4f}"
+                 f";x_realtime={e2e['audio_x_realtime']:.0f}"))
 
     # --- roofline table (deliverable g; from dry-run artifacts) ------------
     from benchmarks import roofline_table

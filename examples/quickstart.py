@@ -1,13 +1,15 @@
-"""Quickstart: the paper's pipeline end-to-end in ~2 minutes on CPU.
+"""Quickstart: the paper's pipeline end-to-end in ~2 minutes on CPU,
+driven by the staged recipe API (repro.api) — train, evaluate, save a
+portable artifact bundle, and serve from it.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
+import numpy as np
 
+from repro.api import IVectorRecipe
 from repro.configs.ivector_tvm import SMOKE
-from repro.core.pipeline import evaluate_state, prepare
-from repro.core import trainer as TR
 from repro.data.speech import SpeechDataConfig
+from repro.serving import IVectorExtractor
 
 cfg = SMOKE.with_overrides(feat_dim=10, n_components=16, ivector_dim=16,
                            posterior_top_k=8, lda_dim=10)
@@ -15,19 +17,24 @@ data = SpeechDataConfig(feat_dim=10, n_components=12, n_speakers=20,
                         utts_per_speaker=6, frames_per_utt=64,
                         speaker_rank=8, channel_rank=4,
                         speaker_scale=0.5, channel_scale=1.1)
+recipe = IVectorRecipe.from_config(cfg, data)
 
-print("1. building synthetic VoxCeleb-like data + training the UBM ...")
-feats, labels, ubm = prepare(cfg, data)
+print("1. recipe.run: synthetic VoxCeleb-like data -> UBM -> augmented-"
+      "formulation TVM\n   (min-divergence on, Sigma updates on) -> "
+      "backend -> EER, one call ...")
+result = recipe.run(n_iters=4, bundle_dir="/tmp/ivector_quickstart_bundle")
+print(f"   EER = {result.eer:.2%}  (random would be 50%)")
+print(f"   saved artifact bundle -> {result.bundle_path}")
 
-print("2. training the augmented-formulation i-vector extractor "
-      "(min-divergence on, Sigma updates on) ...")
-state = TR.train(cfg, ubm, feats, n_iters=4)
+print("2. the same model trained with UBM realignment (paper §3.2), as a "
+      "recipe variant ...")
+r2 = recipe.with_overrides(realign_interval=1).run(data=result.data,
+                                                   n_iters=4)
+print(f"   EER = {r2.eer:.2%}")
 
-print("3. extracting i-vectors -> LDA -> PLDA -> EER ...")
-eer = evaluate_state(cfg, state, feats, labels)
-print(f"   EER = {eer:.2%}  (random would be 50%)")
-
-print("4. the same model trained with UBM realignment (paper §3.2) ...")
-state2 = TR.train(cfg.with_overrides(realign_interval=1), ubm, feats,
-                  n_iters=4)
-print(f"   EER = {evaluate_state(cfg, state2, feats, labels):.2%}")
+print("3. serving the saved bundle (train once, serve anywhere) ...")
+ex = IVectorExtractor.from_bundle(result.bundle_path)
+feats = np.asarray(result.data[0])
+ivecs = ex.extract([feats[0], feats[1][:40]])   # ragged requests
+print(f"   extracted {ivecs.shape[0]} i-vectors of dim {ivecs.shape[1]} "
+      f"from bundle {result.bundle_path}")

@@ -1,0 +1,135 @@
+"""Typed stage artifacts (DESIGN.md §10).
+
+Each pipeline stage consumes and produces a small, named artifact instead
+of loose arrays: ``UBMArtifact`` (the trained universal background model),
+``TVArtifact`` (the total-variability model after EM), and
+``BackendArtifact`` (the scoring chain: centring -> optional whitening ->
+length-norm -> LDA -> PLDA). Artifacts carry their own provenance
+(``meta``), compose into a versioned ``Bundle`` (api/bundle.py), and are
+what `IVectorRecipe` threads between stages.
+
+The backend train/apply/score functions here are the SINGLE
+implementation of the paper's §4.1 evaluation chain; the legacy
+`pipeline.evaluate_state` is a shim over them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ivector_tvm import IVectorConfig
+from repro.core import backend as BK
+from repro.core import tvm as TV
+from repro.core import ubm as U
+from repro.data.speech import make_trials
+
+SCHEMA_VERSION = 1
+
+
+@dataclass
+class UBMArtifact:
+    """Stage 'ubm' output: the trained full-covariance UBM."""
+    ubm: U.FullGMM
+    meta: Dict = field(default_factory=dict)   # seed, diag/full iters, ...
+
+    @property
+    def n_components(self) -> int:
+        return self.ubm.n_components
+
+
+@dataclass
+class TVArtifact:
+    """Stage 'tvm' output: the trained total-variability model plus the
+    (possibly realignment-refreshed) UBM it is aligned against."""
+    model: TV.TVModel
+    ubm: U.FullGMM
+    iterations: int = 0
+    meta: Dict = field(default_factory=dict)   # seed, formulation, ...
+
+    @property
+    def rank(self) -> int:
+        return self.model.rank
+
+
+@dataclass
+class BackendArtifact:
+    """Stage 'backend' output: the trained scoring chain.
+
+    ``whitener`` is present only when the extractor skipped minimum
+    divergence (paper §4.1: whiten before length-norm in that case).
+    """
+    mu: jax.Array                      # [R] training i-vector mean
+    lda: BK.LDA
+    plda: BK.PLDA
+    whitener: Optional[jax.Array] = None   # [R, R] or None
+    meta: Dict = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Backend training / application (the canonical §4.1 chain)
+# ---------------------------------------------------------------------------
+
+
+def train_backend(cfg: IVectorConfig, ivecs, labels) -> BackendArtifact:
+    """Fit the scoring chain on training i-vectors [N, R]."""
+    mu = jnp.mean(ivecs, axis=0)
+    x = ivecs - mu
+    W = None
+    if not cfg.min_divergence:
+        # paper §4.1: whiten before length-norm when min-div was not used
+        _, W = BK.whitener(x)
+        x = x @ W.T
+    x = BK.length_norm(x)
+    lda = BK.train_lda(x, labels, min(cfg.lda_dim, x.shape[1]))
+    xl = np.asarray(BK.apply_lda(lda, x))
+    plda = BK.train_plda(jnp.asarray(xl), labels)
+    return BackendArtifact(mu=mu, lda=lda, plda=plda, whitener=W,
+                           meta={"lda_dim": int(lda.proj.shape[1]),
+                                 "whitened": W is not None})
+
+
+def apply_backend(art: BackendArtifact, ivecs) -> jax.Array:
+    """Project raw i-vectors [N, R] into PLDA scoring space [N, K]."""
+    x = ivecs - art.mu
+    if art.whitener is not None:
+        x = x @ art.whitener.T
+    return BK.apply_lda(art.lda, BK.length_norm(x))
+
+
+def score_trials(art: BackendArtifact, xl, a, b) -> np.ndarray:
+    """PLDA LLR for trial pairs (a[i], b[i]) over projected vectors."""
+    return np.asarray(BK.plda_score_pairs(
+        art.plda, jnp.asarray(np.asarray(xl)[a]),
+        jnp.asarray(np.asarray(xl)[b])))
+
+
+def evaluate_projected(art: BackendArtifact, xl, labels,
+                       seed: int = 0) -> float:
+    """Trial EER over already-projected vectors: THE one implementation
+    of the paper's trial protocol (rng(seed) -> balanced trial draw ->
+    PLDA pair scoring -> EER), shared by the eval stage and
+    `evaluate_ivectors` so curve and final EERs can never diverge."""
+    rng = np.random.default_rng(seed)
+    a, b, y = make_trials(np.asarray(labels), np.arange(len(labels)), rng)
+    return BK.eer(score_trials(art, xl, a, b), y)
+
+
+def evaluate_ivectors(cfg: IVectorConfig, ivecs, labels, seed: int = 0
+                      ) -> Tuple[float, BackendArtifact]:
+    """Train the backend on ``ivecs`` and report trial EER (the legacy
+    `pipeline.evaluate_state` math, minus the extraction)."""
+    art = train_backend(cfg, ivecs, labels)
+    xl = np.asarray(apply_backend(art, ivecs))
+    return evaluate_projected(art, xl, labels, seed), art
+
+
+# pytree registration so artifacts can live inside jit'd pytrees and the
+# checkpoint manager's flatten (meta rides as static aux data)
+jax.tree_util.register_pytree_node(
+    BackendArtifact,
+    lambda a: ((a.mu, a.lda, a.plda, a.whitener), None),
+    lambda _, c: BackendArtifact(*c))

@@ -1,0 +1,154 @@
+"""Versioned train-once / serve-anywhere artifact bundle (DESIGN.md §10).
+
+A `Bundle` is the single portable output of a training run: config + UBM +
+total-variability model + (optional) scoring backend + provenance, written
+through `checkpoint/manager.py` (atomic tmp-dir + rename, npz arrays + a
+JSON manifest). Serving consumes it directly
+(`IVectorExtractor.from_bundle(path)`), so the extraction a bundle yields
+is bit-identical to the in-memory path that saved it.
+
+Schema versioning rules (DESIGN.md §10): ``schema_version`` is bumped on
+any change to the stored tree structure or the meaning of a stored field;
+the loader accepts only versions it knows (<= SCHEMA_VERSION) and fails
+loudly otherwise — silent best-effort loads of future artifacts are how
+serving fleets end up running garbage. Array payloads are integrity-hashed
+(``content_hash``) at save and verified at load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.artifacts import SCHEMA_VERSION, BackendArtifact
+from repro.checkpoint import manager as CM
+from repro.configs.ivector_tvm import IVectorConfig
+from repro.core import backend as BK
+from repro.core import tvm as TV
+from repro.core import ubm as U
+
+_STEP = 0   # a bundle is a single-step checkpoint
+
+
+@dataclass
+class Bundle:
+    """One portable trained artifact: everything serving needs."""
+    cfg: IVectorConfig
+    ubm: U.FullGMM
+    model: TV.TVModel
+    backend: Optional[BackendArtifact] = None
+    provenance: Dict = field(default_factory=dict)
+
+    # -- save ---------------------------------------------------------------
+
+    def _tree(self) -> Dict:
+        tree = {"ubm": self.ubm, "model": self.model}
+        if self.backend is not None:
+            tree["backend"] = self.backend
+        return tree
+
+    def save(self, path) -> Path:
+        """Write the bundle under ``path`` (atomic). Returns the path."""
+        path = Path(path)
+        tree = self._tree()
+        extra = {
+            "schema_version": SCHEMA_VERSION,
+            "kind": "ivector-bundle",
+            "config": dataclasses.asdict(self.cfg),
+            "formulation": self.model.formulation,
+            "has_backend": self.backend is not None,
+            "has_whitener": (self.backend is not None
+                             and self.backend.whitener is not None),
+            "content_hash": content_hash(tree),
+            "provenance": dict(self.provenance,
+                               schema_version=SCHEMA_VERSION,
+                               created_unix=time.time(),
+                               jax_version=jax.__version__),
+        }
+        CM.save(path, _STEP, tree, extra=extra)
+        return path
+
+    # -- load ---------------------------------------------------------------
+
+    @classmethod
+    def load(cls, path, verify: bool = True) -> "Bundle":
+        """Load and schema/integrity-check a saved bundle."""
+        path = Path(path)
+        extra = peek(path)
+        cfg = IVectorConfig(**extra["config"]).validate()
+        skeleton = _skeleton(cfg, extra)
+        tree, _, extra2 = CM.restore(path, skeleton, step=_STEP)
+        bundle = cls(cfg=cfg, ubm=tree["ubm"], model=tree["model"],
+                     backend=tree.get("backend"),
+                     provenance=extra2.get("provenance", {}))
+        if verify:
+            got = content_hash(bundle._tree())
+            want = extra.get("content_hash")
+            if want and got != want:
+                raise ValueError(
+                    f"bundle {path} failed integrity check: stored "
+                    f"content_hash {want[:12]}.. != recomputed {got[:12]}..")
+        return bundle
+
+
+def peek(path) -> Dict:
+    """Read a bundle's manifest ``extra`` (schema, config, provenance)
+    WITHOUT loading any arrays; raises on unknown schema versions."""
+    path = Path(path)
+    step = CM.latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no bundle under {path}")
+    manifest = json.loads(
+        (path / f"step_{step:08d}" / "manifest.json").read_text())
+    extra = manifest.get("extra", {})
+    ver = extra.get("schema_version")
+    if extra.get("kind") != "ivector-bundle" or ver is None:
+        raise ValueError(f"{path} is not an i-vector bundle "
+                         f"(kind={extra.get('kind')!r})")
+    if not isinstance(ver, int) or ver < 1 or ver > SCHEMA_VERSION:
+        raise ValueError(
+            f"bundle {path} has schema_version={ver!r}; this build "
+            f"supports 1..{SCHEMA_VERSION} — refusing a best-effort load")
+    return extra
+
+
+def content_hash(tree) -> str:
+    """Deterministic sha256 over the flattened array payload (keys sorted,
+    dtype+shape+bytes per leaf) — the bundle's integrity fingerprint."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    items = []
+    for kpath, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in kpath)
+        items.append((key, np.ascontiguousarray(np.asarray(leaf))))
+    h = hashlib.sha256()
+    for key, arr in sorted(items, key=lambda kv: kv[0]):
+        h.update(key.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def _skeleton(cfg: IVectorConfig, extra: Dict) -> Dict:
+    """Structure-only pytree matching the saved bundle (restore pulls the
+    real shapes from the npz; the skeleton supplies structure + the static
+    aux data such as the model formulation)."""
+    z = jnp.zeros((), jnp.float32)
+    ubm = U.FullGMM(z, z, z)
+    model = TV.TVModel(T=z, Sigma=z, prior=z, means=z,
+                       formulation=extra["formulation"])
+    tree = {"ubm": ubm, "model": model}
+    if extra.get("has_backend"):
+        tree["backend"] = BackendArtifact(
+            mu=z, lda=BK.LDA(z, z), plda=BK.PLDA(z, z, z),
+            whitener=z if extra.get("has_whitener") else None)
+    return tree

@@ -67,7 +67,69 @@ class IVectorConfig:
     compute_dtype: str = "bfloat16"
 
     def with_overrides(self, **kw) -> "IVectorConfig":
-        return replace(self, **kw)
+        """Derived config; unknown knobs raise (dataclass replace) and the
+        result is validated — conflicting knob combinations fail HERE, at
+        construction, not deep inside the trainer."""
+        return replace(self, **kw).validate()
+
+    def validate(self) -> "IVectorConfig":
+        """Reject unknown enum values and conflicting knob combinations
+        early. Called from ``with_overrides`` and ``IVectorRecipe
+        .from_config`` so every config that reaches the trainer, the
+        serving session, or a saved bundle is already coherent. Returns
+        ``self`` so call sites can chain."""
+        problems = []
+
+        def enum(name, allowed):
+            v = getattr(self, name)
+            if v not in allowed:
+                problems.append(f"{name}={v!r} not in {sorted(allowed)}")
+
+        enum("formulation", {"standard", "augmented"})
+        enum("ubm_update", {"none", "means", "full"})
+        enum("rescore", {"dense", "sparse"})
+        enum("estep", {"dense", "packed"})
+        enum("estep_dtype", {"float32", "bfloat16"})
+        for name in ("feat_dim", "n_components", "ivector_dim", "n_iters",
+                     "estep_chunk", "lda_dim"):
+            if getattr(self, name) < 1:
+                problems.append(f"{name} must be >= 1, got "
+                                f"{getattr(self, name)}")
+        if not 1 <= self.posterior_top_k <= self.n_components:
+            problems.append(
+                f"posterior_top_k={self.posterior_top_k} outside "
+                f"[1, n_components={self.n_components}]")
+        if not 0.0 <= self.posterior_floor < 1.0:
+            problems.append(
+                f"posterior_floor={self.posterior_floor} outside [0, 1)")
+        # NOTE: lda_dim may exceed ivector_dim — the backend clamps the
+        # projection to min(lda_dim, R) by design (a cap, not a conflict).
+        if self.realign_interval < 0:
+            problems.append(
+                f"realign_interval={self.realign_interval} must be >= 0")
+        if self.formulation == "augmented" and self.prior_offset <= 0:
+            problems.append("augmented formulation requires "
+                            f"prior_offset > 0, got {self.prior_offset}")
+        # conflicting knobs: combinations the trainer would silently
+        # ignore (or worse, half-apply) are configuration errors
+        if self.realign_interval > 0 and self.ubm_update == "none":
+            problems.append(
+                "realign_interval > 0 with ubm_update='none': realignment "
+                "is requested but its UBM write-back is disabled")
+        if self.realign_interval > 0 and self.formulation == "standard":
+            problems.append(
+                "realign_interval > 0 with formulation='standard': the "
+                "§3.2 realignment loop is defined for the augmented "
+                "formulation only")
+        if self.estep_dtype == "bfloat16" and self.estep == "dense":
+            problems.append(
+                "estep_dtype='bfloat16' with estep='dense': mixed "
+                "precision only applies to the packed E-step contractions "
+                "(DESIGN.md §9); the dense path would silently ignore it")
+        if problems:
+            raise ValueError("invalid IVectorConfig: "
+                             + "; ".join(problems))
+        return self
 
 
 CONFIG = IVectorConfig()

@@ -1,117 +1,67 @@
-"""End-to-end speaker-verification evaluation (paper §4.1 chain):
-features -> UBM -> TVM training (variant-switchable) -> i-vectors ->
-centre (-> whiten if no min-div) -> length-norm -> LDA -> PLDA -> EER.
+"""LEGACY shims over `repro.api` (the staged recipe / bundle API).
 
-`run_ensemble` implements the paper's measurement protocol: every
-reported number is the ensemble average over multiple training runs with
-random starts (per-seed EER curves, mean ± std aggregation);
-`experiments/summarize.py` renders the dumped json."""
+The prepare / `TR.train` / `evaluate_state` triple and the hand-rolled
+ensemble loop that used to live here are now composed by
+`repro.api.IVectorRecipe`; these wrappers keep the historical entry
+points (examples, benchmarks, external callers) working unchanged while
+delegating every piece of math to the single staged implementation.
+New code should use `repro.api` directly:
+
+    recipe = IVectorRecipe.from_config(cfg, data_cfg)
+    result = recipe.run(seed=0)                # train + backend + EER
+    result = recipe.ensemble(seeds=[0, 1, 2])  # paper's mean±std protocol
+"""
 from __future__ import annotations
 
-import json
-from pathlib import Path
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+from repro.api import artifacts as AR
+from repro.api import recipe as RC
 from repro.configs.ivector_tvm import IVectorConfig
-from repro.core import backend as BK
 from repro.core import trainer as TR
-from repro.core import ubm as U
-from repro.data.speech import SpeechDataConfig, build_dataset, make_trials
+from repro.data.speech import SpeechDataConfig
 
 
 def evaluate_state(cfg: IVectorConfig, state: TR.TrainState, feats,
                    labels, seed: int = 0, mask=None) -> float:
-    """EER of the trained extractor on held-out trials.
-
-    ``mask`` ([U, F], optional) marks valid frames so padded variable-
-    length evaluation batches score identically to unpadded utterances.
-    """
+    """EER of a trained extractor on held-out trials (shim:
+    extraction + `api.artifacts.evaluate_ivectors`)."""
     ivecs = TR.extract(cfg, state, feats, mask=mask)
-    mu = jnp.mean(ivecs, axis=0)
-    x = ivecs - mu
-    if not cfg.min_divergence:
-        # paper §4.1: whiten before length-norm when min-div was not used
-        _, W = BK.whitener(x)
-        x = x @ W.T
-    x = BK.length_norm(x)
-    lda = BK.train_lda(x, labels, min(cfg.lda_dim, x.shape[1]))
-    xl = np.asarray(BK.apply_lda(lda, x))
-    plda = BK.train_plda(jnp.asarray(xl), labels)
-    rng = np.random.default_rng(seed)
-    a, b, y = make_trials(labels, np.arange(len(labels)), rng)
-    # score only the trial pairs (O(N)), not the full N x N matrix
-    scores = np.asarray(BK.plda_score_pairs(
-        plda, jnp.asarray(xl[a]), jnp.asarray(xl[b])))
-    return BK.eer(scores, y)
+    eer, _ = AR.evaluate_ivectors(cfg, ivecs, labels, seed)
+    return eer
 
 
 def prepare(cfg: IVectorConfig, data_cfg: SpeechDataConfig, seed: int = 0):
-    """Build dataset + train the UBM once (shared across variants/seeds)."""
-    feats, labels = build_dataset(data_cfg)
-    frames = feats.reshape(-1, feats.shape[-1])
-    ubm = U.train_ubm(frames, cfg.n_components, jax.random.PRNGKey(seed))
-    return feats, labels, ubm
+    """Build dataset + train the shared UBM (shim: `api.prepare`)."""
+    return RC.prepare(cfg, data_cfg, seed=seed)
 
 
 def run_variant(cfg: IVectorConfig, feats, labels, ubm,
                 n_iters: int, eval_every: int = 1, seed: int = 0) -> Dict:
-    """Train one extractor variant; EER after every ``eval_every`` iters."""
-    curve: List = []
-
-    def cb(state, diag):
-        if state.iteration % eval_every == 0 or state.iteration == n_iters:
-            curve.append((state.iteration,
-                          evaluate_state(cfg, state, feats, labels, seed)))
-
-    TR.train(cfg, ubm, feats, n_iters=n_iters,
-             key=jax.random.PRNGKey(seed + 100), callback=cb)
-    return {"curve": curve, "labels": labels}
+    """Train one extractor variant; EER curve every ``eval_every`` iters
+    (shim: one `recipe.run` with a curve)."""
+    r = RC.IVectorRecipe.from_config(cfg).run(
+        data=(feats, labels, ubm), seed=seed, n_iters=n_iters,
+        eval_every=eval_every)
+    return {"curve": r.curve, "labels": labels}
 
 
 def run_experiment(cfg: IVectorConfig, data_cfg: SpeechDataConfig,
                    n_iters: int, eval_every: int = 1,
                    seed: int = 0) -> Dict:
-    feats, labels, ubm = prepare(cfg, data_cfg, seed)
-    return run_variant(cfg, feats, labels, ubm, n_iters, eval_every, seed)
+    r = RC.IVectorRecipe.from_config(cfg, data_cfg).run(
+        seed=seed, n_iters=n_iters, eval_every=eval_every)
+    return {"curve": r.curve, "labels": r.data[1]}
 
 
 def run_ensemble(cfg: IVectorConfig, data_cfg: Optional[SpeechDataConfig],
                  seeds: Sequence[int], n_iters: int, eval_every: int = 1,
                  name: str = "ensemble", out_dir=None,
                  feats=None, labels=None, ubm=None) -> Dict:
-    """The paper's multi-run random-start protocol: train one extractor
-    per seed (fresh random T init + fresh trial draw; shared data + UBM),
-    collect the per-seed EER curves, and report mean ± std per iteration.
-
-    Pass either ``data_cfg`` (dataset + UBM built via `prepare`) or
-    prebuilt ``feats``/``labels``/``ubm``. With ``out_dir`` the result is
-    dumped as json for `experiments/summarize.py`.
-    """
-    if feats is None:
-        feats, labels, ubm = prepare(cfg, data_cfg, seed=int(seeds[0]))
-    curves: Dict[str, List] = {}
-    for s in seeds:
-        r = run_variant(cfg, feats, labels, ubm, n_iters,
-                        eval_every=eval_every, seed=int(s))
-        curves[str(int(s))] = [(int(it), float(e)) for it, e in r["curve"]]
-    iters = [it for it, _ in next(iter(curves.values()))]
-    eers = np.asarray([[e for _, e in curves[str(int(s))]] for s in seeds])
-    result = {
-        "name": name,
-        "seeds": [int(s) for s in seeds],
-        "iters": iters,
-        "curves": curves,
-        "eer_mean": eers.mean(axis=0).tolist(),
-        "eer_std": eers.std(axis=0).tolist(),
-        "final_eer_mean": float(eers[:, -1].mean()),
-        "final_eer_std": float(eers[:, -1].std()),
-    }
-    if out_dir is not None:
-        out_dir = Path(out_dir)
-        out_dir.mkdir(parents=True, exist_ok=True)
-        (out_dir / f"{name}.json").write_text(json.dumps(result, indent=2))
-    return result
+    """The paper's multi-run random-start protocol (shim:
+    `recipe.ensemble`). Pass either ``data_cfg`` or prebuilt
+    ``feats``/``labels``/``ubm``."""
+    data = None if feats is None else (feats, labels, ubm)
+    return RC.IVectorRecipe.from_config(cfg, data_cfg, name=name).ensemble(
+        data=data, seeds=seeds, n_iters=n_iters, eval_every=eval_every,
+        name=name, out_dir=out_dir)

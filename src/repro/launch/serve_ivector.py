@@ -1,12 +1,21 @@
 """I-vector serving launcher: batched variable-length extraction session.
 
-Mirrors launch/serve.py for the paper's own model: builds (or smoke-trains)
-a (UBM, TVM) pair, starts an ``IVectorExtractor`` session, and drives a
-stream of ragged synthetic requests through it, reporting throughput,
-real-time factor, and bucket/compile statistics.
+Mirrors launch/serve.py for the paper's own model. Two modes:
+
+  * ``--bundle PATH`` — serve a versioned artifact bundle produced by a
+    training run (`recipe.run(bundle_dir=...)` or `Bundle.save`): the
+    train-once/serve-anywhere path. No training happens here.
+  * default — smoke-train a (UBM, TVM) pair, save it AS a bundle
+    (``--save-bundle``), and serve from that bundle, so even the demo
+    exercises the portable-artifact round trip.
+
+Either way the session is an ``IVectorExtractor`` driven by a stream of
+ragged synthetic requests, reporting throughput, real-time factor, and
+bucket/compile statistics.
 
     PYTHONPATH=src python -m repro.launch.serve_ivector --smoke \
         --batch 8 --requests 64
+    PYTHONPATH=src python -m repro.launch.serve_ivector --bundle out/bundle
 """
 from __future__ import annotations
 
@@ -16,7 +25,8 @@ import time
 import jax
 import numpy as np
 
-from repro.configs.ivector_tvm import CONFIG, SMOKE
+from repro.api.bundle import Bundle, peek
+from repro.configs.ivector_tvm import CONFIG, SMOKE, IVectorConfig
 from repro.core import trainer as TR
 from repro.core import ubm as U
 from repro.data.speech import (FRAME_RATE, SpeechDataConfig,
@@ -41,13 +51,27 @@ def build_state(cfg, data_cfg, train_iters: int):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--bundle", default=None,
+                    help="serve this saved artifact bundle (skips training)")
+    ap.add_argument("--save-bundle", default="/tmp/ivector_serve_bundle",
+                    help="where the demo-trained bundle is written")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--min-bucket", type=int, default=32)
     ap.add_argument("--train-iters", type=int, default=1)
     args = ap.parse_args()
 
-    cfg = SMOKE if args.smoke else CONFIG
+    if args.bundle is not None:
+        # manifest-only read for the banner/config; the arrays are loaded
+        # (and integrity-checked) exactly once, by from_bundle below
+        extra = peek(args.bundle)
+        cfg = IVectorConfig(**extra["config"]).validate()
+        print(f"serving bundle {args.bundle} "
+              f"(schema v{extra['schema_version']}, "
+              f"C={cfg.n_components}, R={cfg.ivector_dim}, "
+              f"seed={extra.get('provenance', {}).get('seed')})")
+    else:
+        cfg = SMOKE if args.smoke else CONFIG
     data_cfg = SpeechDataConfig(
         feat_dim=cfg.feat_dim, n_components=max(8, cfg.n_components // 2),
         n_speakers=8 if args.smoke else 40,
@@ -56,12 +80,22 @@ def main():
         min_frames_per_utt=40 if args.smoke else 256,
         speaker_rank=6 if args.smoke else 16,
         channel_rank=3 if args.smoke else 8)
-    state, utts, _ = build_state(cfg, data_cfg, args.train_iters)
+    if args.bundle is not None:
+        bundle_path = args.bundle
+        utts, _ = build_ragged_dataset(data_cfg)
+    else:
+        state, utts, _ = build_state(cfg, data_cfg, args.train_iters)
+        bundle_path = Bundle(
+            cfg=cfg, ubm=state.ubm, model=state.model,
+            provenance={"recipe": "serve_ivector-demo", "seed": 0,
+                        "n_iters": args.train_iters}).save(args.save_bundle)
+        print(f"saved demo bundle -> {bundle_path}")
     utts = utts[:args.requests]
 
-    ex = IVectorExtractor.from_state(
-        cfg, state, ServingConfig(max_batch=args.batch,
-                                  min_bucket=args.min_bucket))
+    # serving ALWAYS consumes the bundle, never loose in-memory arrays
+    ex = IVectorExtractor.from_bundle(
+        bundle_path, ServingConfig(max_batch=args.batch,
+                                   min_bucket=args.min_bucket))
     t0 = time.time()
     ex.extract(utts)                    # cold pass: compiles every bucket
     cold = time.time() - t0

@@ -62,6 +62,7 @@ class IVectorExtractor:
         self.model = model
         self.ubm = ubm
         self.serving = serving
+        self.bundle = None        # set by from_bundle (provenance access)
         # expensive per-model precompute, shared by every request: the
         # engine pack (diag preselection GMM + full-cov precisions) and
         # the TVM precompute (T^T Sigma^{-1} T)
@@ -85,6 +86,19 @@ class IVectorExtractor:
                    serving: ServingConfig = ServingConfig()
                    ) -> "IVectorExtractor":
         return cls(cfg, state.model, state.ubm, serving)
+
+    @classmethod
+    def from_bundle(cls, path, serving: ServingConfig = ServingConfig()
+                    ) -> "IVectorExtractor":
+        """Serving session from a saved artifact bundle (api/bundle.py):
+        the train-once/serve-anywhere path. The bundle's own config drives
+        the session, so the extraction is bit-identical to the in-memory
+        state that saved it."""
+        from repro.api.bundle import Bundle
+        b = Bundle.load(path)
+        ex = cls(b.cfg, b.model, b.ubm, serving)
+        ex.bundle = b
+        return ex
 
     # -- bucketing ----------------------------------------------------------
 

@@ -1,0 +1,262 @@
+"""Staged recipe + versioned artifact-bundle API (DESIGN.md §10) tests:
+config validation fail-fast, bundle save->load->extract bit-identity,
+recipe.run == legacy train+evaluate_state, variant-grid provenance,
+ensemble protocol via the recipe, and schema-version gating."""
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (IVectorRecipe, SCHEMA_VERSION, Bundle,
+                       STAGE_REGISTRY, content_hash, peek, prepare,
+                       register_stage)
+from repro.api import artifacts as AR
+from repro.configs.ivector_tvm import SMOKE as IV_SMOKE
+from repro.core import pipeline as PL
+from repro.core import trainer as TR
+from repro.data.speech import SpeechDataConfig
+from repro.serving import IVectorExtractor, ServingConfig
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = IV_SMOKE.with_overrides(feat_dim=8, n_components=16, ivector_dim=12,
+                              posterior_top_k=8, lda_dim=8, n_iters=2)
+DATA = SpeechDataConfig(feat_dim=8, n_components=8, n_speakers=12,
+                        utts_per_speaker=6, frames_per_utt=50,
+                        speaker_rank=6, channel_rank=3,
+                        speaker_scale=0.8, channel_scale=0.8)
+
+
+@pytest.fixture(scope="module")
+def shared_data():
+    """(feats, labels, ubm) prepared once (seed 0), shared across tests."""
+    return prepare(CFG, DATA, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Config validation: conflicting knobs fail at construction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [
+    dict(realign_interval=1, ubm_update="none"),
+    dict(realign_interval=2, formulation="standard"),
+    dict(estep_dtype="bfloat16", estep="dense"),
+    dict(formulation="kaldi"),
+    dict(ubm_update="sometimes"),
+    dict(rescore="topk"),
+    dict(estep="half"),
+    dict(posterior_top_k=999),
+    dict(posterior_top_k=0),
+    dict(posterior_floor=1.5),
+    dict(lda_dim=0),
+    dict(realign_interval=-1),
+    dict(n_iters=0),
+])
+def test_validate_rejects_conflicts(bad):
+    with pytest.raises(ValueError):
+        CFG.with_overrides(**bad)
+
+
+def test_validate_unknown_knob_raises():
+    with pytest.raises(TypeError):
+        CFG.with_overrides(not_a_knob=3)
+
+
+def test_validate_passes_through_good_configs():
+    assert CFG.validate() is CFG
+    # every documented valid combination constructs
+    CFG.with_overrides(realign_interval=2, ubm_update="full")
+    CFG.with_overrides(estep="packed", estep_dtype="bfloat16")
+    CFG.with_overrides(formulation="standard", min_divergence=False)
+
+
+def test_recipe_from_config_validates():
+    bad = dataclasses.replace(CFG, realign_interval=1, ubm_update="none")
+    with pytest.raises(ValueError):
+        IVectorRecipe.from_config(bad)
+
+
+# ---------------------------------------------------------------------------
+# recipe.run == legacy prepare + TR.train + evaluate_state (SMOKE scale)
+# ---------------------------------------------------------------------------
+
+
+def test_recipe_run_matches_legacy_eer(shared_data):
+    feats, labels, ubm = shared_data
+    seed = 0
+    # legacy hand-wired triple
+    state = TR.train(CFG, ubm, feats, n_iters=2,
+                     key=jax.random.PRNGKey(seed + 100))
+    legacy_eer = PL.evaluate_state(CFG, state, feats, labels, seed)
+    # one recipe call
+    r = IVectorRecipe.from_config(CFG).run(data=shared_data, seed=seed,
+                                           n_iters=2)
+    assert r.eer == pytest.approx(legacy_eer, abs=1e-12)
+    # the trained models are the very same trajectory
+    np.testing.assert_array_equal(np.asarray(r.tv.model.T),
+                                  np.asarray(state.model.T))
+    # artifacts are populated and typed
+    assert r.ubm.ubm.n_components == CFG.n_components
+    assert r.tv.iterations == 2
+    assert r.backend is not None and r.ivectors.shape[1] == CFG.ivector_dim
+    assert r.provenance["schema_version"] == SCHEMA_VERSION
+
+
+def test_legacy_run_variant_shim_matches_recipe(shared_data):
+    feats, labels, ubm = shared_data
+    legacy = PL.run_variant(CFG, feats, labels, ubm, n_iters=2,
+                            eval_every=1, seed=1)
+    r = IVectorRecipe.from_config(CFG).run(data=shared_data, seed=1,
+                                           n_iters=2, eval_every=1)
+    assert [it for it, _ in legacy["curve"]] == [it for it, _ in r.curve]
+    np.testing.assert_allclose([e for _, e in legacy["curve"]],
+                               [e for _, e in r.curve], rtol=0, atol=0)
+    assert r.eer == pytest.approx(r.curve[-1][1], abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Bundle: save -> load -> extract is bit-identical to in-memory
+# ---------------------------------------------------------------------------
+
+
+def test_bundle_roundtrip_bit_identical_extraction(shared_data, tmp_path):
+    r = IVectorRecipe.from_config(CFG).run(
+        data=shared_data, seed=0, n_iters=2,
+        bundle_dir=tmp_path / "bundle")
+    assert r.bundle_path is not None
+    utts = [np.asarray(shared_data[0][i])[:n]
+            for i, n in enumerate([50, 33, 17])]
+    sv = ServingConfig(max_batch=2, min_bucket=16)
+    mem = IVectorExtractor.from_state(CFG, r.state, sv).extract(utts)
+    loaded = IVectorExtractor.from_bundle(r.bundle_path, sv)
+    np.testing.assert_array_equal(loaded.extract(utts), mem)  # bitwise
+    # the loaded session carries config + provenance with it
+    assert loaded.cfg == CFG
+    assert loaded.bundle.provenance["seed"] == 0
+
+
+def test_bundle_preserves_backend_and_hash(shared_data, tmp_path):
+    r = IVectorRecipe.from_config(CFG).run(
+        data=shared_data, seed=0, n_iters=1, bundle_dir=tmp_path / "b")
+    b = Bundle.load(r.bundle_path)
+    np.testing.assert_array_equal(np.asarray(b.backend.lda.proj),
+                                  np.asarray(r.backend.lda.proj))
+    np.testing.assert_array_equal(np.asarray(b.backend.plda.B),
+                                  np.asarray(r.backend.plda.B))
+    assert content_hash(b._tree()) == peek(r.bundle_path)["content_hash"]
+    # backend application through the loaded artifact matches in-memory
+    np.testing.assert_array_equal(
+        np.asarray(AR.apply_backend(b.backend, r.ivectors)),
+        np.asarray(AR.apply_backend(r.backend, r.ivectors)))
+
+
+def test_bundle_schema_version_gating(shared_data, tmp_path):
+    r = IVectorRecipe.from_config(CFG).run(
+        data=shared_data, seed=0, n_iters=1, bundle_dir=tmp_path / "b")
+    mf = Path(r.bundle_path) / "step_00000000" / "manifest.json"
+    manifest = json.loads(mf.read_text())
+    manifest["extra"]["schema_version"] = SCHEMA_VERSION + 1
+    mf.write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="schema_version"):
+        Bundle.load(r.bundle_path)
+    manifest["extra"]["kind"] = "something-else"
+    mf.write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="not an i-vector bundle"):
+        Bundle.load(r.bundle_path)
+
+
+def test_bundle_integrity_check(shared_data, tmp_path):
+    r = IVectorRecipe.from_config(CFG).run(
+        data=shared_data, seed=0, n_iters=1, bundle_dir=tmp_path / "b")
+    mf = Path(r.bundle_path) / "step_00000000" / "manifest.json"
+    manifest = json.loads(mf.read_text())
+    manifest["extra"]["content_hash"] = "0" * 64
+    mf.write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="integrity"):
+        Bundle.load(r.bundle_path)
+    assert Bundle.load(r.bundle_path, verify=False) is not None
+
+
+# ---------------------------------------------------------------------------
+# Variant grid + ensemble protocol
+# ---------------------------------------------------------------------------
+
+
+def test_variant_grid_one_result_per_combination(shared_data):
+    recipe = IVectorRecipe.from_config(CFG)
+    grid = dict(formulation=["standard", "augmented"],
+                estep=["dense", "packed"])
+    recipes = recipe.variants(**grid)
+    assert len(recipes) == 4
+    out = recipe.run_variants(data=shared_data, seed=0, n_iters=1, **grid)
+    assert len(out) == 4
+    variants = [tuple(sorted(r.provenance["variant"].items()))
+                for r in out.values()]
+    assert len(set(variants)) == 4          # distinct provenance each
+    for name, r in out.items():
+        assert np.isfinite(r.eer) and 0.0 <= r.eer <= 0.6
+        assert r.provenance["recipe"] == name
+        ov = r.provenance["variant"]
+        assert r.cfg.formulation == ov["formulation"]
+        assert r.cfg.estep == ov["estep"]
+
+
+def test_recipe_ensemble_matches_legacy_run_ensemble(shared_data,
+                                                     tmp_path):
+    feats, labels, ubm = shared_data
+    seeds = [0, 1]
+    legacy = PL.run_ensemble(CFG, None, seeds, n_iters=2, eval_every=2,
+                             name="legacy", out_dir=tmp_path,
+                             feats=feats, labels=labels, ubm=ubm)
+    r = IVectorRecipe.from_config(CFG, name="new").ensemble(
+        data=shared_data, seeds=seeds, n_iters=2, eval_every=2)
+    assert legacy["iters"] == r["iters"]
+    np.testing.assert_allclose(legacy["eer_mean"], r["eer_mean"],
+                               rtol=0, atol=0)
+    np.testing.assert_allclose(legacy["final_eer_std"], r["final_eer_std"],
+                               rtol=0, atol=0)
+    assert (tmp_path / "legacy.json").exists()
+
+
+# ---------------------------------------------------------------------------
+# Stage registry: canonical chain present, custom stages pluggable
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_stages_registered():
+    for name in IVectorRecipe.DEFAULT_STAGES:
+        assert name in STAGE_REGISTRY, name
+
+
+def test_custom_stage_composes(shared_data):
+    calls = []
+
+    @register_stage
+    class ProbeStage:
+        name = "probe-test-stage"
+
+        def run(self, ctx):
+            calls.append(ctx.tv.iterations)
+            ctx.metrics["probed"] = 1.0
+            return ctx
+
+    try:
+        recipe = IVectorRecipe.from_config(
+            CFG, stages=("features", "ubm", "tvm", "probe-test-stage",
+                         "backend", "eval"))
+        r = recipe.run(data=shared_data, seed=0, n_iters=1)
+        assert calls == [1]
+        assert r.metrics["probed"] == 1.0
+        assert np.isfinite(r.eer)
+    finally:
+        STAGE_REGISTRY.pop("probe-test-stage", None)
+
+
+def test_unknown_stage_rejected():
+    with pytest.raises(KeyError, match="unknown stage"):
+        IVectorRecipe.from_config(CFG, stages=("features", "nope"))

@@ -3,6 +3,8 @@ accumulation path (any chunk size, ragged masks, NaN-garbage padding),
 engine-based UBM EM invariants (weight renormalisation, PSD floors), the
 full UBM refresh at realignment, checkpointed-resume determinism, and the
 multi-seed ensemble runner."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -332,8 +334,16 @@ def test_refresh_disabled_matches_means_mode(tiny_data):
 
 def test_ubm_update_none_disables_writeback(tiny_data):
     feats, labels, ubm = tiny_data
-    cfg = _cfg(feat_dim=6, n_components=8, realign_interval=1, n_iters=2,
-               ubm_update="none")
+    # realign_interval > 0 with ubm_update='none' is now rejected at
+    # config construction (IVectorConfig.validate) ...
+    with pytest.raises(ValueError):
+        _cfg(feat_dim=6, n_components=8, realign_interval=1, n_iters=2,
+             ubm_update="none")
+    # ... and the trainer itself still treats the write-back as a no-op
+    # for a config that bypasses validation (e.g. deserialized state)
+    cfg = dataclasses.replace(
+        _cfg(feat_dim=6, n_components=8, n_iters=2),
+        realign_interval=1, ubm_update="none")
     state = TR.train(cfg, ubm, feats, n_iters=2)
     np.testing.assert_allclose(np.asarray(state.ubm.means),
                                np.asarray(ubm.means))
