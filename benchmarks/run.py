@@ -47,6 +47,17 @@ def main() -> None:
         f"{te['contraction_hlo_flop_ratio_dense_over_packed']:.2f}"
         f";mem_ratio={te['memory']['ratio_dense_over_packed']:.2f}"
         f";bf16_rel_err={te['max_rel_diff_bf16_vs_f32']:.1e}"))
+    sc = speed.scale_compare(device_counts=(1, 2), utts_per_device=4,
+                             reps=1, naive_utts=0,
+                             overrides=dict(feat_dim=6, n_components=16,
+                                            posterior_top_k=4,
+                                            ivector_dim=8,
+                                            frames_per_utt=32))
+    rows.append((
+        "speed/scale", "",
+        f"weak_eff_at_{sc['cases'][-1]['devices']}dev="
+        f"{sc['weak_scaling_efficiency_at_max']:.2f}"
+        f";coll_bytes={sc['cases'][-1]['all_reduce_bytes_per_macro_step']}"))
     e2e = speed.end2end_recipe()
     rows.append(("speed/end2end", f"{e2e['seconds'] * 1e6:.0f}",
                  f"s_per_iter={e2e['seconds_per_iter']:.3f}"

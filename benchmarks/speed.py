@@ -329,6 +329,147 @@ def run_posterior(smoke: bool = False, out_path=None):
     return r
 
 
+# -- weak scaling over the sharded trainer substrate (DESIGN.md §11) -------
+
+_SCALE_WORKER = r"""
+import json, sys, time
+import jax, jax.numpy as jnp, numpy as np
+spec = json.loads(sys.argv[1])
+from repro.configs.ivector_tvm import SMOKE
+from repro.core import trainer as TR
+from repro.core import tvm as TV
+from repro.core import ubm as U
+from repro.launch import ivector_cell as IC
+from repro.launch import mesh as MS
+from repro.analysis.hlo_cost import analyze_hlo
+
+n_dev = spec["devices"]
+assert len(jax.devices()) == n_dev, (len(jax.devices()), n_dev)
+cfg = SMOKE.with_overrides(**spec["overrides"])
+U_tot = spec["utts_per_device"] * n_dev
+key = jax.random.PRNGKey(0)
+C, D = cfg.n_components, cfg.feat_dim
+means = jax.random.normal(key, (C, D)) * 2.0
+A = jax.random.normal(jax.random.fold_in(key, 1), (C, D, D)) * 0.2
+covs = jnp.einsum('cij,ckj->cik', A, A) + jnp.eye(D)
+ubm = U.FullGMM(jnp.ones((C,)) / C, means, covs)
+model = TV.init_model(jax.random.fold_in(key, 3), ubm.means, ubm.covs,
+                      cfg.ivector_dim, cfg.formulation, cfg.prior_offset)
+feats = jax.random.normal(jax.random.fold_in(key, 2),
+                          (U_tot, cfg.frames_per_utt, D))
+mesh = MS.resolve_mesh((n_dev, 1), n_utts=U_tot, n_components=C)
+feats, _ = TR._place(mesh, feats, None)
+iter_fn = TR.make_iter_fn(cfg, mesh)
+compiled = iter_fn.lower(model, ubm, feats, None).compile()
+jax.block_until_ready(compiled(model, ubm, feats, None))   # warm
+t0 = time.time()
+reps = spec["reps"]
+for _ in range(reps):
+    out = compiled(model, ubm, feats, None)
+jax.block_until_ready(out)
+t = (time.time() - t0) / reps
+hlo = analyze_hlo(compiled.as_text())
+res = {
+    "devices": n_dev,
+    "utts": U_tot,
+    "seconds_per_macro_step": t,
+    "utts_per_second": U_tot / t,
+    "per_device_utts_per_second": U_tot / t / n_dev,
+    "all_reduce_bytes_per_macro_step": int(hlo["coll_bytes"]),
+    "model_flops": IC.model_flops(cfg, U_tot),
+    "model_flops_per_second": IC.model_flops(cfg, U_tot) / t,
+}
+if spec["naive_utts"]:
+    from benchmarks.speed import naive_em_iteration
+    nu = spec["naive_utts"]
+    feats_np = np.asarray(feats[:nu])
+    t0 = time.time()
+    naive_em_iteration(model, ubm, feats_np, cfg.posterior_top_k)
+    res["naive_seconds_per_utt"] = (time.time() - t0) / nu
+print("SCALE_JSON " + json.dumps(res))
+"""
+
+
+def scale_compare(device_counts=(1, 2, 4, 8), utts_per_device=16,
+                  overrides=None, naive_utts=4, reps=3):
+    """Weak scaling of the sharded trainer substrate on 1..8 fake XLA
+    host devices (one subprocess per count — jax locks the device count
+    at first init; env via `launch.mesh.fake_device_env`).
+
+    Each worker times one fused EM macro-step (`trainer.make_iter_fn` on
+    an (n, 1) data mesh) at a FIXED per-device utterance load, walks the
+    compiled HLO for the all-reduce bytes the exit reduction actually
+    moves, and reports achieved useful FLOP/s against the analytic
+    `launch.ivector_cell.model_flops` model. The 1-device worker also
+    times the scalar naive EM baseline per-utterance, so the summary can
+    state the measured fraction of the paper's 25x EM speed-up at the
+    largest mesh."""
+    import subprocess
+
+    from repro.launch.mesh import fake_device_env
+
+    overrides = dict(overrides or {})
+    overrides.setdefault("estep_chunk", utts_per_device)  # 1 chunk/rank:
+    # the engine's bit-exact regime (chunk partition == rank partition)
+    cases = []
+    for n in device_counts:
+        spec = {"devices": int(n), "utts_per_device": int(utts_per_device),
+                "overrides": overrides, "reps": int(reps),
+                "naive_utts": int(naive_utts) if n == 1 else 0}
+        env = fake_device_env(n)
+        env["PYTHONPATH"] = f"{REPO_ROOT / 'src'}:{REPO_ROOT}"
+        out = subprocess.run(
+            [sys.executable, "-c", _SCALE_WORKER, json.dumps(spec)],
+            capture_output=True, text=True, env=env, timeout=900)
+        if out.returncode != 0:
+            raise RuntimeError(f"scale worker ({n} devices) failed:\n"
+                               f"{out.stderr[-3000:]}")
+        line = [l for l in out.stdout.splitlines()
+                if l.startswith("SCALE_JSON ")][-1]
+        cases.append(json.loads(line[len("SCALE_JSON "):]))
+
+    base, peak = cases[0], cases[-1]
+    for c in cases:
+        # ideal weak scaling keeps the macro-step time flat as devices
+        # and utterances grow together
+        c["weak_scaling_efficiency"] = (base["seconds_per_macro_step"]
+                                        / c["seconds_per_macro_step"])
+    out = {
+        "config": {"utts_per_device": utts_per_device,
+                   "overrides": overrides,
+                   "device_counts": [int(n) for n in device_counts]},
+        "paper_claims": {"em_speedup_vs_kaldi_cpu": 25},
+        "cases": cases,
+        "weak_scaling_efficiency_at_max": peak["weak_scaling_efficiency"],
+    }
+    if "naive_seconds_per_utt" in base:
+        naive_s = base["naive_seconds_per_utt"] * peak["utts"]
+        speedup = naive_s / peak["seconds_per_macro_step"]
+        out["naive_seconds_extrapolated_at_max"] = naive_s
+        out["em_speedup_vs_naive_at_max"] = speedup
+        out["fraction_of_paper_25x"] = speedup / 25.0
+    return out
+
+
+def run_scale(smoke: bool = False, out_path=None):
+    """The `scale` bench case: writes ``BENCH_scale.json`` at the repo
+    root (CI runs the smoke scale so artifact generation can't silently
+    rot; the committed artifact is the full 1->8 device sweep)."""
+    kw = (dict(device_counts=(1, 2), utts_per_device=4, reps=1,
+               naive_utts=2,
+               overrides=dict(feat_dim=6, n_components=16,
+                              posterior_top_k=4, ivector_dim=8,
+                              frames_per_utt=32))
+          if smoke else
+          dict(device_counts=(1, 2, 4, 8), utts_per_device=16, reps=3,
+               naive_utts=4))
+    r = scale_compare(**kw)
+    r["smoke"] = smoke
+    p = Path(out_path) if out_path else REPO_ROOT / "BENCH_scale.json"
+    p.write_text(json.dumps(r, indent=2) + "\n")
+    return r
+
+
 def end2end_recipe(n_iters: int = 2, seed: int = 0):
     """`recipe.run` wall time on the SMOKE-scale task: the full staged
     chain (features -> UBM -> TVM -> backend -> eval), so the perf
@@ -421,6 +562,9 @@ if __name__ == "__main__":
         print(json.dumps(r, indent=2))
     elif "tvm_estep" in sys.argv[1:]:
         r = run_tvm_estep(smoke="--smoke" in sys.argv[1:])
+        print(json.dumps(r, indent=2))
+    elif "scale" in sys.argv[1:]:
+        r = run_scale(smoke="--smoke" in sys.argv[1:])
         print(json.dumps(r, indent=2))
     elif "end2end" in sys.argv[1:]:
         print(json.dumps(end2end_recipe(), indent=2))

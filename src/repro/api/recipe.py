@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import itertools
 import json
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -112,18 +112,26 @@ class IVectorRecipe:
 
     def run(self, data=None, seed: int = 0, n_iters: Optional[int] = None,
             eval_every: int = 0, bundle_dir=None, mask=None,
-            ckpt_dir=None, ckpt_interval: int = 1) -> RecipeResult:
+            ckpt_dir=None, ckpt_interval: int = 1,
+            mesh=None) -> RecipeResult:
         """Drive every stage once; optionally save a versioned bundle.
 
         ``data``: None (built from ``data_cfg``), ``(feats, labels)``, or
         the ``(feats, labels, ubm)`` triple of legacy `prepare` / a prior
         result's ``.data`` (the shared-UBM multi-variant protocol).
+
+        ``mesh``: the trainer substrate (a `jax.sharding.Mesh`, a
+        ``(data, model)`` tuple, or None for ``cfg.mesh`` / the auto
+        local mesh — DESIGN.md §11). A run-time KNOB, not a stage: it is
+        threaded through every engine entry point, recorded in the run's
+        provenance, and stripped from saved bundles (artifacts are
+        substrate-independent).
         """
         names = [s.name for s in self.stages]
         ctx = SG.RunContext(cfg=self.cfg, seed=seed, n_iters=n_iters,
                             eval_every=eval_every, data_cfg=self.data_cfg,
                             mask=mask, ckpt_dir=ckpt_dir,
-                            ckpt_interval=ckpt_interval,
+                            ckpt_interval=ckpt_interval, mesh=mesh,
                             defer_final_eval={"backend", "eval"}
                             .issubset(names))
         _feed(ctx, data)
@@ -141,6 +149,8 @@ class IVectorRecipe:
             "seed": int(seed),
             "n_iters": int(ctx.tv.iterations if ctx.tv else 0),
             "stages": [s.name for s in self.stages],
+            "mesh": _mesh_provenance(mesh if mesh is not None
+                                     else self.cfg.mesh, ctx),
         }
         result = RecipeResult(
             cfg=self.cfg, seed=seed,
@@ -156,7 +166,11 @@ class IVectorRecipe:
                 raise ValueError(
                     "bundle_dir requires a trained TV model, but this "
                     f"recipe's stage chain {names} produced none")
-            bundle = Bundle(cfg=self.cfg, ubm=ctx.tv.ubm,
+            # stage-vs-knob ruling (DESIGN.md §11): the mesh is where a
+            # run executed, not what it produced — bundles stay
+            # substrate-independent, provenance records the substrate
+            bundle = Bundle(cfg=replace(self.cfg, mesh=None),
+                            ubm=ctx.tv.ubm,
                             model=ctx.tv.model, backend=ctx.backend,
                             provenance=provenance)
             result.bundle_path = bundle.save(bundle_dir)
@@ -229,6 +243,22 @@ def prepare(cfg: IVectorConfig, data_cfg: SpeechDataConfig, seed: int = 0):
     ctx = SG.STAGE_REGISTRY["features"]().run(ctx)
     ctx = SG.STAGE_REGISTRY["ubm"]().run(ctx)
     return ctx.feats, ctx.labels, ctx.ubm.ubm
+
+
+def _mesh_provenance(mesh, ctx) -> Optional[list]:
+    """((axis, size), ...) descriptor of the substrate this run actually
+    trained on (the trainer's resolution rules), JSON-shaped; None when
+    resolution is impossible here (e.g. no features were built)."""
+    from repro.launch import mesh as MS
+    try:
+        resolved = MS.resolve_mesh(
+            mesh,
+            n_utts=None if ctx.feats is None else int(ctx.feats.shape[0]),
+            n_components=ctx.cfg.n_components)
+    except (ValueError, TypeError):
+        return None
+    desc = MS.mesh_descriptor(resolved)
+    return None if desc is None else [list(p) for p in desc]
 
 
 def _feed(ctx: SG.RunContext, data) -> None:

@@ -63,6 +63,10 @@ class RunContext:
     # checkpointing (threaded into the trainer by the tvm stage)
     ckpt_dir: Optional[str] = None
     ckpt_interval: int = 1
+    # trainer substrate (DESIGN.md §11): Mesh | (data, model) | None
+    # (cfg.mesh, else auto local). A run-time knob, not a stage — it is
+    # threaded into every engine entry point but never changes artifacts.
+    mesh: Optional[object] = None
     # set by the recipe when backend+eval stages follow the tvm stage:
     # the curve's final point is then taken from THEIR result instead of
     # re-extracting/re-fitting inside the training callback (the two
@@ -143,8 +147,14 @@ class UBMStage:
             return ctx
         frames = ctx.feats.reshape(-1, ctx.feats.shape[-1])
         fmask = None if ctx.mask is None else ctx.mask.reshape(-1)
+        mesh = None
+        if ctx.mesh is not None or ctx.cfg.mesh is not None:
+            from repro.launch import mesh as MS
+            mesh = MS.resolve_mesh(
+                ctx.mesh if ctx.mesh is not None else ctx.cfg.mesh)
         gmm = U.train_ubm(frames, ctx.cfg.n_components,
-                          jax.random.PRNGKey(ctx.seed), mask=fmask)
+                          jax.random.PRNGKey(ctx.seed), mask=fmask,
+                          mesh=mesh)
         ctx.ubm = AR.UBMArtifact(gmm, meta={"seed": ctx.seed,
                                             "n_frames": int(frames.shape[0])})
         return ctx
@@ -171,7 +181,8 @@ class TVMStage:
                 if it == n_iters and ctx.defer_final_eval:
                     return   # final point appended from the eval stage
                 if it % ctx.eval_every == 0 or it == n_iters:
-                    ivecs = TR.extract(cfg, state, ctx.feats, mask=ctx.mask)
+                    ivecs = TR.extract(cfg, state, ctx.feats, mask=ctx.mask,
+                                       mesh=ctx.mesh)
                     e, _ = AR.evaluate_ivectors(cfg, ivecs, ctx.labels,
                                                 ctx.seed)
                     ctx.curve.append((it, e))
@@ -179,7 +190,7 @@ class TVMStage:
                          key=jax.random.PRNGKey(ctx.seed + 100),
                          callback=callback, mask=ctx.mask,
                          ckpt_dir=ctx.ckpt_dir,
-                         ckpt_interval=ctx.ckpt_interval)
+                         ckpt_interval=ctx.ckpt_interval, mesh=ctx.mesh)
         ctx.tv = AR.TVArtifact(model=state.model, ubm=state.ubm,
                                iterations=state.iteration,
                                meta={"seed": ctx.seed,
@@ -196,7 +207,7 @@ class BackendStage:
 
     def run(self, ctx: RunContext) -> RunContext:
         ctx.ivectors = TR.extract(ctx.cfg, ctx.state, ctx.feats,
-                                  mask=ctx.mask)
+                                  mask=ctx.mask, mesh=ctx.mesh)
         if ctx.backend is None:
             ctx.backend = AR.train_backend(ctx.cfg, ctx.ivectors,
                                            ctx.labels)

@@ -7,6 +7,7 @@ augmented (Kaldi) formulation with prior offset p=100, LDA 400->200, PLDA.
 ``SMOKE`` is the CPU-scale reduction used by tests and benchmarks.
 """
 from dataclasses import dataclass, replace
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -65,6 +66,20 @@ class IVectorConfig:
     param_dtype: str = "float32"
     # stats/matmul compute dtype; bf16 w/ fp32 accumulation on TPU
     compute_dtype: str = "bfloat16"
+    # default trainer substrate (DESIGN.md §11): a (data, model) device
+    # grid every macro-step runs on via the engine's shard_map mode. None
+    # auto-sizes a local data-parallel mesh (1 device -> bit-identical
+    # single-device path). A KNOB, not a stage: it changes where the same
+    # math runs, never what the pipeline computes, so saved bundles strip
+    # it (api/recipe.py) and provenance records it per run.
+    mesh: Optional[Tuple[int, int]] = None
+
+    def __post_init__(self):
+        # JSON round-trips (artifact bundles, provenance) turn the tuple
+        # into a list; coerce back so the frozen config stays hashable
+        # (lru_cached trainer factories key on it).
+        if isinstance(self.mesh, list):
+            object.__setattr__(self, "mesh", tuple(self.mesh))
 
     def with_overrides(self, **kw) -> "IVectorConfig":
         """Derived config; unknown knobs raise (dataclass replace) and the
@@ -121,6 +136,17 @@ class IVectorConfig:
                 "realign_interval > 0 with formulation='standard': the "
                 "§3.2 realignment loop is defined for the augmented "
                 "formulation only")
+        if self.mesh is not None:
+            m = self.mesh
+            if (not isinstance(m, tuple) or len(m) != 2
+                    or not all(isinstance(v, int) and v >= 1 for v in m)):
+                problems.append(
+                    f"mesh={m!r} must be a (data, model) pair of "
+                    "positive ints (or None for the auto local mesh)")
+            elif self.n_components % m[1]:
+                problems.append(
+                    f"mesh model extent {m[1]} does not divide "
+                    f"n_components={self.n_components}")
         if self.estep_dtype == "bfloat16" and self.estep == "dense":
             problems.append(
                 "estep_dtype='bfloat16' with estep='dense': mixed "

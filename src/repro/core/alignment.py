@@ -63,13 +63,15 @@ def rescore_selected(x, sel, full, diag_ll, *, precomp=None,
                      rescore: str = "dense", rescore_pack=None):
     """Phase 2: loglik of the selected components -> [F, K].
 
-    ``full`` None scores the selected set with the (already-computed)
-    diag scores — the diag phase of UBM EM, where there is nothing to
-    rescore and ``rescore`` is moot. 'dense' evaluates all C and gathers
+    ``full`` None with no ``precomp`` scores the selected set with the
+    (already-computed) diag scores — the diag phase of UBM EM, where
+    there is nothing to rescore and ``rescore`` is moot. ``precomp``
+    alone is a full parameterisation (const/lin/precisions), so full-cov
+    rescoring needs no GMM object. 'dense' evaluates all C and gathers
     (exact current-TPU adaptation); 'sparse' gathers first and scores
     only K (``kernels.ops.gmm_rescore``), never materialising [F, C].
     """
-    if full is None:
+    if full is None and precomp is None:
         return jnp.take_along_axis(diag_ll, sel, axis=1)
     if rescore == "sparse":
         return U.full_rescore(full, x, sel, precomp=precomp,
@@ -78,6 +80,26 @@ def rescore_selected(x, sel, full, diag_ll, *, precomp=None,
         raise ValueError(f"rescore must be 'dense' or 'sparse': {rescore}")
     ll = U.full_loglik(full, x, precomp=precomp)            # [F, C]
     return jnp.take_along_axis(ll, sel, axis=1)
+
+
+def finalise_posteriors(sel_ll, floor: float, mask=None):
+    """Selected-set logliks [F, K] -> (posteriors [F, K], lse [F]).
+
+    The shared tail of every alignment path — softmax over the selected
+    set, floor + renormalise, padding-frame zeroing — used by both the
+    in-memory `align_frames` and the owner-local sharded path in
+    `engine._align_sharded` (where ``sel_ll`` arrives replicated after the
+    masked pmax), so the two paths are the same code, not two copies.
+    """
+    lse = jax.scipy.special.logsumexp(sel_ll, axis=1)      # [F]
+    post = floor_renormalise(jnp.exp(sel_ll - lse[:, None]), floor)
+    if mask is not None:
+        # where, not multiply: garbage padding frames can produce NaN/inf
+        # posteriors (overflowing logliks), and NaN * 0 == NaN
+        valid = mask.astype(bool)
+        post = jnp.where(valid[:, None], post, 0.0)
+        lse = jnp.where(valid, lse, 0.0)
+    return post.astype(f32), lse.astype(f32)
 
 
 def align_frames(x, full, diag: U.DiagGMM, *, top_k: int = 20,
@@ -106,16 +128,9 @@ def align_frames(x, full, diag: U.DiagGMM, *, top_k: int = 20,
     sel_ll = rescore_selected(x, sel, full, diag_ll, precomp=precomp,
                               rescore=rescore,
                               rescore_pack=rescore_pack)   # [F, K]
-    lse = jax.scipy.special.logsumexp(sel_ll, axis=1)      # [F]
-    post = floor_renormalise(jnp.exp(sel_ll - lse[:, None]), floor)
-    if mask is not None:
-        # where, not multiply: garbage padding frames can produce NaN/inf
-        # posteriors (overflowing logliks), and NaN * 0 == NaN
-        valid = mask.astype(bool)
-        post = jnp.where(valid[:, None], post, 0.0)
-        lse = jnp.where(valid, lse, 0.0)
-    out = SparsePosteriors(post.astype(f32), sel)
-    return (out, lse.astype(f32)) if with_loglik else out
+    post, lse = finalise_posteriors(sel_ll, floor, mask)
+    out = SparsePosteriors(post, sel)
+    return (out, lse) if with_loglik else out
 
 
 def densify(post: SparsePosteriors, C: int) -> jax.Array:

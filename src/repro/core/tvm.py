@@ -94,7 +94,7 @@ def precompute(model: TVModel, estep: str = "dense") -> Precomp:
 
 
 def posterior(model: TVModel, pre: Precomp, n, f, mean_only: bool = False,
-              estep_dtype: str = "float32"
+              estep_dtype: str = "float32", axis: Optional[str] = None
               ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """n: [U, C], f: [U, C, D] -> (phi [U, R], Phi [U, R, R] | None).
 
@@ -107,14 +107,29 @@ def posterior(model: TVModel, pre: Precomp, n, f, mean_only: bool = False,
     Cholesky boundary. ``mean_only=True`` solves just the rhs (R× fewer
     triangular solves than the identity-RHS covariance solve) and
     returns ``Phi=None`` — the extraction/serving scoring path.
+
+    ``axis`` (inside the engine's shard_map mode): n/f and the precompute
+    rows cover only the rank-local C-block, so the component contractions
+    are partial sums — they psum over ``axis`` BEFORE the eye/prior terms
+    are added, and everything downstream (solves, phi, Phi) is replicated
+    over the model axis. This is the only model-axis collective of the
+    E-step (DESIGN.md §11).
     """
     R = model.rank
     if pre.packed:
         Lp = ops.tvm_estep_l(n, pre.U, dtype=estep_dtype)      # [U, P]
+        if axis is not None:
+            Lp = jax.lax.psum(Lp, axis)
         L = jnp.eye(R, dtype=f32) + ops.unpack_symmetric(Lp, R)
     else:
-        L = jnp.eye(R, dtype=f32) + jnp.einsum("uc,crs->urs", n, pre.U)
-    rhs = model.prior[None] + jnp.einsum("cdr,ucd->ur", pre.Pj, f)
+        Ld = jnp.einsum("uc,crs->urs", n, pre.U)
+        if axis is not None:
+            Ld = jax.lax.psum(Ld, axis)
+        L = jnp.eye(R, dtype=f32) + Ld
+    rhs = jnp.einsum("cdr,ucd->ur", pre.Pj, f)
+    if axis is not None:
+        rhs = jax.lax.psum(rhs, axis)
+    rhs = model.prior[None] + rhs
     chol = jnp.linalg.cholesky(L)
     phi = jax.scipy.linalg.cho_solve((chol, True), rhs[..., None])[..., 0]
     if mean_only:
@@ -147,15 +162,23 @@ class EMAccum(NamedTuple):
 
 
 def em_accumulate(model: TVModel, pre: Precomp, n, f,
-                  estep_dtype: str = "float32") -> EMAccum:
+                  estep_dtype: str = "float32",
+                  axis: Optional[str] = None) -> EMAccum:
     """One minibatch of utterance stats -> E-step accumulators.
 
     Packed ``pre`` keeps the symmetric operands packed END TO END: the
     per-utterance second moment Phi + φφᵀ is packed once [U, P] and both
     the A-accumulation (``ops.tvm_estep_a``) and the tiny H reduction
     consume the packed form — A is stored packed until the M-step solve.
+
+    With ``axis`` (model-sharded n/f/pre) the posterior solve psums its
+    partial precision/rhs over the axis; phi/Phi come back replicated, so
+    A/B/n_tot below stay rank-local rows of the global accumulators and
+    h/H/n_utts are replicated — exactly the packing the engine's exit
+    psum expects (DESIGN.md §11).
     """
-    phi, Phi = posterior(model, pre, n, f, estep_dtype=estep_dtype)
+    phi, Phi = posterior(model, pre, n, f, estep_dtype=estep_dtype,
+                         axis=axis)
     PP = Phi + phi[:, :, None] * phi[:, None, :]
     if pre.packed:
         PPp = ops.pack_symmetric(PP)                           # [U, P]

@@ -213,7 +213,7 @@ def _as_utterances(x, mask, frame_chunk: int):
 
 def train_ubm(x, C: int, key, diag_iters: int = 8, full_iters: int = 4,
               top_k: int = 0, chunk: int = 8, frame_chunk: int = 4096,
-              mask=None, rescore: str = "dense") -> FullGMM:
+              mask=None, rescore: str = "dense", mesh=None) -> FullGMM:
     """The Kaldi-style recipe (diag EM, then full-covariance EM), with the
     E-side streamed through the StatsEngine: utterance chunks are scanned
     so nothing frame-resident ([F, C] posteriors, [F, D^2] expansions)
@@ -227,15 +227,28 @@ def train_ubm(x, C: int, key, diag_iters: int = 8, full_iters: int = 4,
     'sparse') picks how the full-covariance phase scores the selected
     set (DESIGN.md §8); it only pays off with a pruned ``top_k``, and
     the diag phase (no full-cov rescoring) ignores it.
+
+    ``mesh`` runs both EM phases through the engine's sharded mode
+    (pseudo-utterances over the data axes, components over 'model') —
+    the same macro-step substrate the trainer uses (DESIGN.md §11). It
+    is dropped (local streaming) when the pseudo-utterance count does
+    not divide the mesh's data extent.
     """
     from repro.core import engine as EN   # deferred: engine imports ubm
     feats, mask = _as_utterances(x, mask, frame_chunk)
+    if mesh is not None:
+        d = 1
+        for a, s in zip(mesh.axis_names, mesh.devices.shape):
+            if a != "model":
+                d *= int(s)
+        if feats.shape[0] % d or C % mesh.shape.get("model", 1):
+            mesh = None
     gmm = init_diag_from_data(feats, C, key, mask=mask)
     K = int(top_k) if top_k else C
     spec_d = EN.EngineSpec(n_components=C, top_k=K, floor=0.0,
                            second_order="diag", chunk=chunk)
     step_d = jax.jit(lambda g, xs, m: EN.stream_ubm(
-        spec_d, EN.pack_diag(g), xs, m))
+        spec_d, EN.pack_diag(g), xs, m, mesh=mesh))
     for _ in range(diag_iters):
         st = step_d(gmm, feats, mask)
         gmm = diag_m_step(st.n, st.f, st.ss)
@@ -244,7 +257,7 @@ def train_ubm(x, C: int, key, diag_iters: int = 8, full_iters: int = 4,
                            second_order="full", chunk=chunk,
                            rescore=rescore)
     step_f = jax.jit(lambda g, xs, m: EN.stream_ubm(
-        spec_f, EN.pack_ubm(g), xs, m))
+        spec_f, EN.pack_ubm(g), xs, m, mesh=mesh))
     for _ in range(full_iters):
         st = step_f(full, feats, mask)
         full = full_m_step(st.n, st.f, st.ss)

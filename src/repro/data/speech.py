@@ -114,6 +114,54 @@ def build_ragged_dataset(cfg: SpeechDataConfig
     return [fixed[i, :int(n)] for i, n in enumerate(lengths)], labels
 
 
+def iter_batches(feats, mask=None, batch: int = 0):
+    """Yield (feats_b, mask_b) macro-batch slices of [U, F, D] features
+    in utterance order. ``batch`` <= 0 yields the whole array once;
+    ragged tails are yielded as-is (the engine's masked chunk body is
+    exact on any batch size). ``mask_b`` is None when ``mask`` is None."""
+    U = feats.shape[0]
+    if batch <= 0 or batch >= U:
+        yield feats, mask
+        return
+    for s in range(0, U, batch):
+        e = min(s + batch, U)
+        yield feats[s:e], (None if mask is None else mask[s:e])
+
+
+def prefetch_to_device(it, size: int = 2, sharding=None):
+    """Double-buffered host->device prefetch (DESIGN.md §11).
+
+    Wraps an iterator of (feats_b, mask_b) tuples: each element is
+    ``jax.device_put`` eagerly (an async transfer) while up to
+    ``size - 1`` earlier elements are still being consumed, so the next
+    macro-batch's H2D copy overlaps the current batch's compute — the
+    standard flax prefetch_to_device idiom, minus the flax dependency.
+
+    ``sharding`` is an optional per-element tuple (e.g. a NamedSharding
+    per leaf, None leaves placed on the default device); None elements of
+    the batch (absent mask) pass through untouched. ``size`` < 2 degrades
+    gracefully to an eager-placement passthrough.
+    """
+    from collections import deque
+
+    def put(batch):
+        if sharding is None:
+            return tuple(None if x is None else jnp.asarray(x)
+                         for x in batch)
+        return tuple(
+            x if x is None else
+            (jax.device_put(x, s) if s is not None else jnp.asarray(x))
+            for x, s in zip(batch, sharding))
+
+    buf = deque()
+    for batch in it:
+        buf.append(put(batch))
+        if len(buf) >= max(size, 1):
+            yield buf.popleft()
+    while buf:
+        yield buf.popleft()
+
+
 def make_trials(labels: np.ndarray, ivec_ids: np.ndarray, rng: np.random.Generator,
                 n_trials: int = 20000) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Balanced target/nontarget trial list over utterance indices."""

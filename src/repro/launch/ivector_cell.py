@@ -2,12 +2,15 @@
 distributed EM macro-step (alignment -> Baum-Welch -> E-step accumulation)
 on the production mesh.
 
-Sharding: utterances over the data axes, UBM components + T_c blocks over
-'model'. The cross-component reductions in eqs. (3)-(4) become psums over
-'model'; per-utterance accumulators psum over data. All expressed via
-GSPMD sharding constraints (tags) like the LM stack.
+Thin shims over the StatsEngine's mesh mode (core/engine.py, DESIGN.md
+§11): utterances shard over the data axes, UBM components + T_c blocks
+over 'model', and ALL the block math — two-stage top-K candidate
+exchange, owner-local rescoring and Baum-Welch scatter, E-step
+accumulation — is the engine's single `chunk_body` implementation. This
+module only adapts the dry-run calling convention (raw arrays in, tagged
+accumulators out) and owns the analytic FLOP model + lowering report.
 
-Shapes (full config): C=2048, D=72, R=400, 512 utts x 1024 frames per
+Shapes (full config): C=2048, D=72, R=400, 8192 utts x 1024 frames per
 macro-step — the paper's VoxCeleb setup.
 """
 from __future__ import annotations
@@ -18,164 +21,77 @@ import jax.numpy as jnp
 from repro.analysis.roofline import roofline_from_compiled
 from repro.configs import get_shape
 from repro.configs.ivector_tvm import CONFIG as IV_CONFIG
-from repro.core import alignment as AL
-from repro.core import stats as ST
+from repro.core import engine as EN
 from repro.core import tvm as TV
 from repro.core import ubm as U
-from repro.kernels import compat, ops
 from repro.launch.mesh import make_production_mesh
-from repro.sharding import make_rules, tag, use_rules
+from repro.sharding import make_rules, use_rules
 
 f32 = jnp.float32
 
 
 def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
                         second_order: bool):
-    """Alignment + Baum-Welch stats with components sharded over 'model',
-    all collectives explicit (shard_map):
+    """Alignment + Baum-Welch stats with components sharded over 'model':
+    one chunk through the engine's shard_map mode (`engine.stream` with
+    ``collect_nf``), returning (n [U, C], f [U, C, D], S [C, D, D]).
 
-      1. each model rank diag-preselects over its C-block (frames
-         replicated over 'model'),
-      2. two-stage top-K: local top-K per rank, all-gather only the
-         [*, K] candidates (not the [*, C] scores), global top-K,
-      3. full-cov loglik of the selected set, per ``cfg.rescore``
-         (DESIGN.md §8): 'dense' scores the whole local C-block with the
-         vec-trick matmul and gathers the owned entries; 'sparse'
-         gather-and-rescores ONLY the K selected slots (the [f_loc,
-         C_loc] block scores are never materialised). Either way the
-         replicated [*, K] logliks are assembled with a masked pmax
-         (each component is owned by exactly one rank),
-      4. floor + renormalise (replicated, tiny),
-      5. stats accumulated owner-locally: a rank scatters only the
-         posterior entries whose component it owns — zero stats comms.
-
-    Replaces: AG of [F, C] scores at top_k (68.7 GB/step) + AG at the
-    stats scatter (21.7 GB/step) with an AG of [F, P*K] candidates
-    (~1.5 GB/step). See EXPERIMENTS.md §Perf (ivector iters).
-
-    Every rank-local math stage is the engine's shared implementation —
-    `ubm.diag_coeffs`/`diag_loglik_from_coeffs` for the preselection
-    scores, `kernels.ops.gmm_loglik` / `ops.gmm_rescore` for the
-    full-cov rescoring, `alignment.floor_renormalise` for the pruning
-    step (which also gives this path the Kaldi keep-arg-max flooring
-    invariant), and `stats.scatter_accumulate` for the Baum-Welch
-    scatter — only the collectives (candidate exchange, masked pmax,
-    S psum) live here.
+    The engine's `_align_sharded` provides the collectives contract this
+    path used to hand-roll: local top-min(K, C_loc) per rank, all-gather
+    of only the [*, P·k] candidates (never the [*, C] scores — an AG of
+    68.7 GB/step replaced by ~1.5 GB/step, EXPERIMENTS.md §Perf), masked
+    pmax assembly of the selected-set logliks, owner-local scatter with
+    zero stats comms, and a single exit all-reduce of the packed
+    accumulators over the data axes ('psum': at pod scale the
+    bandwidth-optimal tree reduction beats the deterministic ordered
+    fold, DESIGN.md §11).
     """
-    from jax.sharding import PartitionSpec as P
-
-    K = cfg.posterior_top_k
-    rescore = getattr(cfg, "rescore", "dense")
-    C, D = cfg.n_components, cfg.feat_dim
-    Pm = mesh.shape["model"]
-    C_loc = C // Pm
-    data_axes = tuple(a for a in mesh.axis_names if a != "model")
-    d_const, d_lin, d_quad = U.diag_coeffs(diag_gmm)  # [C], [D, C], [D, C]
-    f_const, f_lin, f_P = full_pre
-    f_P = f_P.reshape(C, D * D)
-
-    def block(feats_b, dc, dl, dq, fc, fl, fp):
-        r = jax.lax.axis_index("model")
-        Ub, F_, _ = feats_b.shape
-        x = feats_b.reshape(-1, D)                     # [f_loc, D]
-        # local diag scores + local top-K
-        dll = U.diag_loglik_from_coeffs(x, dc, dl, dq)  # [f_loc, C_loc]
-        lv, li = jax.lax.top_k(dll, K)
-        gi = li + r * C_loc
-        # exchange candidates only
-        lv_all = jax.lax.all_gather(lv, "model", axis=1, tiled=True)
-        gi_all = jax.lax.all_gather(gi, "model", axis=1, tiled=True)
-        sv, sp = jax.lax.top_k(lv_all, K)
-        sel = jnp.take_along_axis(gi_all, sp, axis=1)  # [f_loc, K] global ids
-        own = (sel // C_loc) == r
-        loc = jnp.where(own, sel % C_loc, 0)
-        if rescore == "sparse":
-            # gather-and-rescore only the selected slots against the
-            # local C-block (unowned slots score component 0 and are
-            # masked out below) — [f_loc, C_loc] never materialises
-            vals = ops.gmm_rescore(x, loc, fc, fl.T, fp)
-        else:
-            # dense vec-trick over the local block, then gather
-            fll = ops.gmm_loglik(x, fc, fl.T, fp)      # [f_loc, C_loc]
-            vals = jnp.take_along_axis(fll, loc, axis=1)
-        vals = jnp.where(own, vals, -jnp.inf)
-        sel_ll = jax.lax.pmax(vals, "model")           # [f_loc, K] replicated
-        sel_ll = sel_ll - jax.scipy.special.logsumexp(sel_ll, axis=1,
-                                                      keepdims=True)
-        post = AL.floor_renormalise(jnp.exp(sel_ll), cfg.posterior_floor)
-        # owner-local stats: scatter only owned entries
-        pv = jnp.where(own, post, 0.0)                 # [f_loc, K]
-        n_b, f_b, S_flat = ST.scatter_accumulate(
-            x, pv, loc, jnp.repeat(jnp.arange(Ub), F_), Ub, C_loc,
-            second_order="full" if second_order else None)
-        if second_order:
-            S_b = jax.lax.psum(S_flat, data_axes).reshape(C_loc, D, D)
-        else:
-            S_b = jnp.zeros((C_loc, D, D), jnp.float32)
-        return n_b, f_b, S_b
-
-    dp = P(data_axes, None, None)
-    cshard = P("model")
-    fn = compat.shard_map(
-        block, mesh=mesh,
-        in_specs=(dp, cshard, P(None, "model"), P(None, "model"),
-                  cshard, P("model", None), P("model", None)),
-        out_specs=(P(data_axes, "model"), P(data_axes, "model", None),
-                   P("model", None, None)),
-        check_vma=False)
-    return fn(feats_c, d_const, d_lin, d_quad, f_const, f_lin, f_P)
+    D = feats_c.shape[-1]
+    spec = EN.EngineSpec(
+        n_components=cfg.n_components, top_k=cfg.posterior_top_k,
+        floor=cfg.posterior_floor,
+        second_order="full" if second_order else None,
+        chunk=0, rescore=getattr(cfg, "rescore", "dense"))
+    pack = EN.UBMPack(None, diag_gmm, full_pre, U.rescore_pack(full_pre))
+    (tot,), nf = EN.stream(spec, pack, feats_c, None,
+                           (EN.TotalsAccum(spec, D),), collect_nf=True,
+                           mesh=mesh, exit_reduce="psum")
+    S = (tot.ss if second_order
+         else jnp.zeros((cfg.n_components, D, D), f32))
+    return nf[0], nf[1], S
 
 
 def em_macro_step(cfg, mesh, ubm_w, ubm_means, ubm_covs, T, Sigma, prior,
                   feats, utt_chunk: int = 512):
     """One jittable EM macro-step over a global batch of utterances.
 
-    Scans utterance chunks through the FULL pipeline (alignment -> stats ->
-    E-step accumulate): nothing frame-resident ([F, C] posteriors,
-    [F, D^2] expansions, [U, R, R] posterior covariances) ever exists for
-    more than one chunk — the XLA analogue of the paper's fixed-size-batch
-    streaming (Fig. 1), and what the Pallas kernels fuse on real TPU.
-    Alignment + stats run inside an explicit shard_map (components over
-    'model'); the E-step contraction is GSPMD-tagged.
+    The engine scans utterance chunks through the FULL pipeline
+    (alignment -> stats -> E-step accumulate) inside ONE shard_map:
+    nothing frame-resident ([F, C] posteriors, [F, D^2] expansions,
+    [U, R, R] posterior covariances) ever exists for more than one chunk —
+    the XLA analogue of the paper's fixed-size-batch streaming (Fig. 1),
+    and what the Pallas kernels fuse on real TPU. Only the packed
+    [C, P]/[C, D, R] accumulators all-reduce, once, at scan exit
+    ('psum' — pod-scale bandwidth over ordered-fold determinism).
     """
     ubm = U.FullGMM(ubm_w, ubm_means, ubm_covs)
     model = TV.TVModel(T=T, Sigma=Sigma, prior=prior, means=ubm_means,
                        formulation="augmented")
-    feats = tag(feats, "utts", None, None)
-    diag = ubm.to_diag()
-    pre_ubm = U.full_precisions(ubm)
-    estep = getattr(cfg, "estep", "dense")
-    estep_dtype = getattr(cfg, "estep_dtype", "float32")
-    pre = TV.precompute(model, estep=estep)
-    # packed U is [C, P]: one fewer axis to tag than the dense [C, R, R]
-    pre = TV.Precomp(tag(pre.U, "components", None) if pre.packed
-                     else tag(pre.U, "components", None, None),
-                     tag(pre.Pj, "components", None, None))
-    C, D, R = cfg.n_components, cfg.feat_dim, cfg.ivector_dim
-    Utt = feats.shape[0]
-    g = Utt // utt_chunk
-    f32_ = jnp.float32
-
-    def chunk_body(carry, feats_c):
-        acc, S_tot = carry
-        n, f, S_b = sharded_align_stats(cfg, mesh, diag, pre_ubm, feats_c,
-                                        cfg.update_sigma)
-        n = tag(n, "utts", "components")
-        f = tag(f, "utts", "components", None)
-        acc_c = TV.em_accumulate(model, pre, n, f, estep_dtype=estep_dtype)
-        acc = TV.merge_accums(acc, acc_c)
-        S_tot = S_tot + tag(S_b, "components", None, None)
-        return (acc, S_tot), None
-
-    zero = TV.EMAccum.zeros(C, D, R, estep=estep)
-    S0 = jnp.zeros((C, D, D), f32_)
-    feats_g = feats.reshape((g, utt_chunk) + feats.shape[1:])
-    (acc, S), _ = jax.lax.scan(chunk_body, (zero, S0), feats_g)
-    acc = TV.EMAccum(tag(acc.A, "components", None) if acc.A.ndim == 2
-                     else tag(acc.A, "components", None, None),
-                     tag(acc.B, "components", None, None),
-                     acc.h, acc.H, acc.n_tot, acc.n_utts)
-    return acc, tag(S, "components", None, None)
+    spec = EN.EngineSpec(
+        n_components=cfg.n_components, top_k=cfg.posterior_top_k,
+        floor=cfg.posterior_floor,
+        second_order="full" if cfg.update_sigma else None,
+        chunk=utt_chunk, rescore=getattr(cfg, "rescore", "dense"))
+    pre = TV.precompute(model, estep=getattr(cfg, "estep", "dense"))
+    accums = (EN.TotalsAccum(spec, cfg.feat_dim),
+              EN.TVMAccum(model, pre,
+                          estep_dtype=getattr(cfg, "estep_dtype",
+                                              "float32")))
+    (tot, acc), _ = EN.stream(spec, EN.pack_ubm(ubm), feats, None, accums,
+                              mesh=mesh, exit_reduce="psum")
+    C, D = cfg.n_components, cfg.feat_dim
+    S = (tot.ss if cfg.update_sigma else jnp.zeros((C, D, D), f32))
+    return acc, S
 
 
 def input_structs(cfg, shape):

@@ -1,24 +1,121 @@
-"""Production mesh construction.
+"""Mesh construction + resolution: the one place device enumeration lives.
 
 Defined as functions (not module constants) so importing never touches jax
 device state. The dry-run entry point sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import; everything else sees the real device count.
+
+``resolve_mesh`` is the trainer-facing entry point (DESIGN.md §11): it
+normalises every accepted mesh description — an explicit ``Mesh``, a
+``(data, model)`` tuple, a config's ``mesh`` field, or None (auto) — to a
+concrete ('data', 'model') mesh, so the engine/trainer only ever see one
+mesh vocabulary. Tests and benchmarks that spawn fake-device subprocesses
+share ``fake_device_env`` instead of hand-building ``XLA_FLAGS`` strings.
 """
 from __future__ import annotations
 
+import os
+from typing import Optional, Tuple
+
 import jax
+import numpy as np
+
+
+def fake_device_env(n: int, base: Optional[dict] = None) -> dict:
+    """Environment for a subprocess that should see ``n`` fake XLA host
+    devices (jax locks the device count at first init, so each device
+    count needs its own process). Shared by tests/test_distributed.py,
+    the mesh-trainer tests, and ``benchmarks/speed.py scale``."""
+    env = dict(os.environ if base is None else base)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    return env
+
+
+def device_grid(n: Optional[int] = None) -> np.ndarray:
+    """First ``n`` (default: all) local devices as a flat ndarray — the
+    single device-enumeration point every mesh constructor goes through."""
+    devs = jax.devices()
+    if n is None:
+        n = len(devs)
+    if n > len(devs):
+        raise ValueError(f"requested {n} devices, have {len(devs)}")
+    return np.asarray(devs[:n])
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    n = int(np.prod(shape))
+    from jax.sharding import Mesh
+    return Mesh(device_grid(n).reshape(shape), axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1, pod: int = 0):
-    """Small mesh over however many (host) devices exist — for tests."""
+    """Small ('data', 'model') mesh over the first ``data*model`` (host)
+    devices — tests, benchmarks, and the default trainer substrate. May
+    use a subset of the available devices (unlike ``jax.make_mesh``)."""
+    from jax.sharding import Mesh
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
-    return jax.make_mesh((data, model), ("data", "model"))
+        return Mesh(device_grid(pod * data * model)
+                    .reshape(pod, data, model), ("pod", "data", "model"))
+    return Mesh(device_grid(data * model).reshape(data, model),
+                ("data", "model"))
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def make_default_mesh(n_utts: Optional[int] = None,
+                      n_components: Optional[int] = None):
+    """The default trainer substrate: data-parallel over as many local
+    devices as the utterance count divides into, model axis 1. On a
+    single-device host this is a 1-device mesh — the mesh-is-default
+    contract (DESIGN.md §11) with zero behaviour change."""
+    n_dev = len(jax.devices())
+    data = n_dev if n_utts is None else _largest_divisor_leq(n_utts, n_dev)
+    return make_local_mesh(data=data, model=1)
+
+
+def resolve_mesh(mesh, n_utts: Optional[int] = None,
+                 n_components: Optional[int] = None):
+    """Normalise a mesh description to a concrete Mesh.
+
+    Accepts: a ``jax.sharding.Mesh`` (returned as-is), a ``(data, model)``
+    tuple, or None (auto: ``make_default_mesh``). Validates divisibility
+    of the utterance/component counts against the axis sizes so shard_map
+    fails here, with a readable message, instead of deep inside the
+    engine."""
+    from jax.sharding import Mesh
+    if mesh is None:
+        mesh = make_default_mesh(n_utts, n_components)
+    elif isinstance(mesh, (tuple, list)):
+        if len(mesh) != 2:
+            raise ValueError(f"mesh tuple must be (data, model), got {mesh}")
+        mesh = make_local_mesh(data=int(mesh[0]), model=int(mesh[1]))
+    elif not isinstance(mesh, Mesh):
+        raise TypeError(f"mesh must be a Mesh, (data, model) tuple or "
+                        f"None, got {type(mesh)}")
+    d = int(np.prod([s for a, s in zip(mesh.axis_names, mesh.devices.shape)
+                     if a != "model"]))
+    m = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if n_utts is not None and n_utts % d:
+        raise ValueError(f"{n_utts} utterances do not divide the mesh's "
+                         f"data extent {d} ({dict(zip(mesh.axis_names, mesh.devices.shape))})")
+    if n_components is not None and n_components % m:
+        raise ValueError(f"{n_components} components do not divide the "
+                         f"mesh's model extent {m}")
+    return mesh
+
+
+def mesh_descriptor(mesh) -> Optional[Tuple[Tuple[str, int], ...]]:
+    """Hashable/JSON-able ((axis, size), ...) descriptor — what provenance
+    records instead of the device objects."""
+    if mesh is None:
+        return None
+    return tuple((str(a), int(s))
+                 for a, s in zip(mesh.axis_names, mesh.devices.shape))

@@ -13,8 +13,8 @@ REPO = Path(__file__).resolve().parents[1]
 
 
 def run_py(code: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    from repro.launch.mesh import fake_device_env
+    env = fake_device_env(devices)
     env["PYTHONPATH"] = str(REPO / "src")
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, env=env,

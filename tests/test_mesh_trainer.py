@@ -1,0 +1,282 @@
+"""The sharded-mesh-as-default trainer substrate (DESIGN.md §11):
+
+- a 1-device mesh (the default on this host) is BIT-identical to the
+  historical single-device trainer path,
+- an 8-fake-device data mesh with the chunk partition aligned to the
+  rank partition reproduces the full multi-iteration trajectory — incl.
+  ``ubm_update='full'`` realignment — bit-for-bit (ordered exit fold),
+- model-sharded meshes agree to fp-reassociation tolerance on one
+  macro-step and give the same EER end-to-end,
+- the prefetch iterator is element-for-element the plain iterator,
+- elastic resume after an injected failure is bit-exact,
+- `recipe.run(mesh=...)` matches the legacy path, records the substrate
+  in provenance, and strips it from saved bundles.
+
+Multi-device scenarios run in subprocesses (jax locks the device count
+at first init), sharing `launch.mesh.fake_device_env`.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import IVectorRecipe, peek, prepare
+from repro.configs.ivector_tvm import SMOKE as IV_SMOKE
+from repro.core import trainer as TR
+from repro.data import speech as DS
+from repro.data.speech import SpeechDataConfig
+from repro.launch.mesh import fake_device_env
+
+REPO = Path(__file__).resolve().parents[1]
+
+CFG = IV_SMOKE.with_overrides(feat_dim=8, n_components=16, ivector_dim=12,
+                              posterior_top_k=8, lda_dim=8, n_iters=2)
+DATA = SpeechDataConfig(feat_dim=8, n_components=8, n_speakers=12,
+                        utts_per_speaker=6, frames_per_utt=50,
+                        speaker_rank=6, channel_rank=3,
+                        speaker_scale=0.8, channel_scale=0.8)
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    env = fake_device_env(devices)
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=540)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.fixture(scope="module")
+def shared_data():
+    return prepare(CFG, DATA, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Single-process: the default substrate is the old trainer, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_default_is_bit_identical(shared_data):
+    """train() with no mesh (auto 1-device) == explicit (1, 1) mesh —
+    and thus the historical single-device trainer — bit-for-bit."""
+    feats, _, ubm = shared_data
+    key = jax.random.PRNGKey(7)
+    a = TR.train(CFG, ubm, feats, key=key)
+    b = TR.train(CFG, ubm, feats, key=key, mesh=(1, 1))
+    np.testing.assert_array_equal(np.asarray(a.model.T),
+                                  np.asarray(b.model.T))
+    np.testing.assert_array_equal(np.asarray(a.model.Sigma),
+                                  np.asarray(b.model.Sigma))
+
+
+def test_mesh_macro_batched_accumulators_match(shared_data):
+    """One macro-batched E-step pass (the prefetch-consuming loop's unit)
+    merges to the resident pass's accumulators up to fp reassociation
+    (the M-step amplifies these ~2e-7 differences chaotically over a
+    trajectory — DESIGN.md §11 — so the contract is on accumulators)."""
+    feats, _, ubm = shared_data
+    from repro.core import tvm as TV
+    model = TV.init_model(jax.random.PRNGKey(3), ubm.means, ubm.covs,
+                          CFG.ivector_dim, CFG.formulation,
+                          CFG.prior_offset)
+    mesh = TR._resolve_mesh(CFG, None, feats.shape[0])
+    batch_fn = TR.make_batch_accum_fn(CFG, mesh)
+    tot = acc = None
+    for fb, mb in DS.iter_batches(feats, None, 24):
+        t, a = batch_fn(model, ubm, fb, mb)
+        tot = t if tot is None else TR.merge_totals(tot, t)
+        acc = a if acc is None else TV.merge_accums(acc, a)
+    iter_fn = TR.make_iter_fn(CFG, mesh)
+    _, tot_ref, _ = iter_fn(model, ubm, feats, None)
+    np.testing.assert_allclose(np.asarray(tot.n), np.asarray(tot_ref.n),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tot.f), np.asarray(tot_ref.f),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mesh_train_macro_batch_path_runs(shared_data):
+    """The batched+prefetched training loop produces a finite trajectory
+    and the same shapes as the resident path."""
+    feats, _, ubm = shared_data
+    key = jax.random.PRNGKey(7)
+    st = TR.train(CFG, ubm, feats, key=key, macro_batch=24, prefetch=2)
+    assert st.iteration == CFG.n_iters
+    assert np.isfinite(np.asarray(st.model.T)).all()
+    assert st.model.T.shape == (CFG.n_components, CFG.feat_dim,
+                                CFG.ivector_dim)
+
+
+def test_prefetch_matches_plain_iterator(shared_data):
+    """prefetch_to_device == iter_batches element-for-element (values and
+    batching), with and without a mask."""
+    feats, _, _ = shared_data
+    mask = jnp.ones(feats.shape[:2], jnp.float32)
+    for m in (None, mask):
+        plain = list(DS.iter_batches(feats, m, 16))
+        pre = list(DS.prefetch_to_device(DS.iter_batches(feats, m, 16),
+                                         size=3))
+        assert len(plain) == len(pre)
+        for (fa, ma), (fb, mb) in zip(plain, pre):
+            np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+            assert (ma is None) == (mb is None)
+            if ma is not None:
+                np.testing.assert_array_equal(np.asarray(ma),
+                                              np.asarray(mb))
+
+
+def test_resume_after_injected_failure_bit_exact(shared_data, tmp_path):
+    """An InjectedFailure mid-run costs one macro-step: the supervised
+    loop restarts from the last checkpoint and finishes bit-identical to
+    an uninterrupted run (realignment + full UBM refresh enabled)."""
+    feats, _, ubm = shared_data
+    cfg = CFG.with_overrides(n_iters=3, realign_interval=2,
+                             ubm_update="full", update_sigma=True)
+    key = jax.random.PRNGKey(5)
+    ref = TR.train(cfg, ubm, feats, key=key)
+    st, rep = TR.train_supervised(
+        cfg, ubm, feats, key=key, ckpt_dir=tmp_path / "ckpt",
+        fail_at=lambda step, attempt: step == 1 and attempt == 0)
+    assert rep.n_restarts == 1
+    assert st.iteration == cfg.n_iters
+    np.testing.assert_array_equal(np.asarray(st.model.T),
+                                  np.asarray(ref.model.T))
+    np.testing.assert_array_equal(np.asarray(st.model.Sigma),
+                                  np.asarray(ref.model.Sigma))
+    np.testing.assert_array_equal(np.asarray(st.ubm.means),
+                                  np.asarray(ref.ubm.means))
+
+
+def test_recipe_mesh_knob_parity_and_bundle_strip(shared_data, tmp_path):
+    """recipe.run(mesh=(1,1)) == recipe.run() (same EER + i-vectors);
+    provenance records the resolved substrate; the saved bundle's config
+    has the mesh stripped (artifacts are substrate-independent)."""
+    recipe = IVectorRecipe.from_config(CFG, DATA)
+    ref = recipe.run(data=shared_data, seed=0)
+    got = recipe.run(data=shared_data, seed=0, mesh=(1, 1),
+                     bundle_dir=tmp_path / "bundle")
+    assert got.eer == ref.eer
+    np.testing.assert_array_equal(got.ivectors, ref.ivectors)
+    assert got.provenance["mesh"] == [["data", 1], ["model", 1]]
+    meta = peek(got.bundle_path)
+    assert meta["config"].get("mesh") is None   # substrate stripped
+    assert meta["provenance"]["mesh"] == [["data", 1], ["model", 1]]
+
+
+def test_config_mesh_knob_validation():
+    """cfg.mesh is validated like every other knob and survives a JSON
+    round-trip as a hashable tuple."""
+    good = CFG.with_overrides(mesh=(2, 1))
+    assert good.mesh == (2, 1)
+    assert CFG.with_overrides(mesh=[4, 2]).mesh == (4, 2)   # list coerced
+    with pytest.raises(ValueError):
+        CFG.with_overrides(mesh=(0, 2))
+    with pytest.raises(ValueError):
+        CFG.with_overrides(mesh=(2,))
+    with pytest.raises(ValueError):
+        CFG.with_overrides(mesh=(2, 3))   # 16 components % 3 != 0
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: 8 fake devices
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_trajectory_bit_exact_8dev():
+    """The tentpole contract: an (8, 1) data mesh with the utterance
+    chunk partition aligned to the rank partition (estep_chunk == U/8)
+    reproduces the single-device 3-iteration trajectory BIT-FOR-BIT on T
+    and Sigma — including ``ubm_update='full'`` + realignment — via the
+    ordered exit fold (DESIGN.md §11)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.ivector_tvm import SMOKE
+        from repro.core import trainer as TR
+        from repro.data.speech import SpeechDataConfig, build_dataset
+        from repro.core import ubm as U
+        data = SpeechDataConfig(feat_dim=8, n_components=8, n_speakers=12,
+                                utts_per_speaker=4, frames_per_utt=40,
+                                speaker_rank=6, channel_rank=3,
+                                speaker_scale=0.8, channel_scale=0.8)
+        feats, labels = build_dataset(data)   # 48 utts
+        gmm = U.train_ubm(feats.reshape(-1, 8), 16, jax.random.PRNGKey(0))
+        cfg = SMOKE.with_overrides(feat_dim=8, n_components=16,
+                                   ivector_dim=12, posterior_top_k=8,
+                                   lda_dim=8, n_iters=3,
+                                   realign_interval=2, ubm_update='full',
+                                   update_sigma=True,
+                                   estep_chunk=feats.shape[0] // 8)
+        key = jax.random.PRNGKey(100)
+        ref = TR.train(cfg, gmm, feats, key=key, mesh=(1, 1))
+        got = TR.train(cfg, gmm, feats, key=key, mesh=(8, 1))
+        np.testing.assert_array_equal(np.asarray(got.model.T),
+                                      np.asarray(ref.model.T))
+        np.testing.assert_array_equal(np.asarray(got.model.Sigma),
+                                      np.asarray(ref.model.Sigma))
+        np.testing.assert_array_equal(np.asarray(got.ubm.means),
+                                      np.asarray(ref.ubm.means))
+        from repro.api import artifacts as AR
+        iv_ref = TR.extract(cfg, ref, feats, mesh=(1, 1))
+        iv_got = TR.extract(cfg, got, feats, mesh=(8, 1))
+        np.testing.assert_array_equal(np.asarray(iv_got),
+                                      np.asarray(iv_ref))
+        e_ref, _ = AR.evaluate_ivectors(cfg, iv_ref, labels, 0)
+        e_got, _ = AR.evaluate_ivectors(cfg, iv_got, labels, 0)
+        assert e_got == e_ref, (e_got, e_ref)
+        print('BITEXACT_OK', e_got)
+    """)
+    assert "BITEXACT_OK" in out
+
+
+def test_model_sharded_mesh_matches_to_tolerance():
+    """Component-sharded meshes ((4,2), (1,8)) reassociate the model-axis
+    contraction, so one fused macro-step agrees to fp tolerance (not
+    bit-exactness — DESIGN.md §11), and per-utterance stats n/f stay
+    BIT-identical across every sharding (per-utterance reductions never
+    cross ranks)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.ivector_tvm import SMOKE
+        from repro.core import trainer as TR, tvm as TV
+        from repro.data.speech import SpeechDataConfig, build_dataset
+        from repro.core import ubm as U
+        data = SpeechDataConfig(feat_dim=8, n_components=8, n_speakers=8,
+                                utts_per_speaker=4, frames_per_utt=40,
+                                speaker_rank=6, channel_rank=3,
+                                speaker_scale=0.8, channel_scale=0.8)
+        feats, labels = build_dataset(data)   # 32 utts
+        gmm = U.train_ubm(feats.reshape(-1, 8), 16, jax.random.PRNGKey(0))
+        cfg = SMOKE.with_overrides(feat_dim=8, n_components=16,
+                                   ivector_dim=12, posterior_top_k=8,
+                                   lda_dim=8, update_sigma=True,
+                                   estep_chunk=4)
+        model = TV.init_model(jax.random.PRNGKey(100), gmm.means, gmm.covs,
+                              cfg.ivector_dim, cfg.formulation,
+                              cfg.prior_offset)
+        ref_m, ref_tot, _ = TR.make_iter_fn(cfg, TR._resolve_mesh(
+            cfg, (1, 1), feats.shape[0]))(model, gmm, feats, None)
+        ref_st = TR.make_stats_fn(cfg)(gmm, feats, None)
+        for shape in ((4, 2), (1, 8)):
+            mesh = TR._resolve_mesh(cfg, shape, feats.shape[0])
+            fp, _ = TR._place(mesh, feats, None)
+            got_m, got_tot, _ = TR.make_iter_fn(cfg, mesh)(
+                model, gmm, fp, None)
+            np.testing.assert_allclose(np.asarray(got_m.T),
+                                       np.asarray(ref_m.T),
+                                       rtol=2e-4, atol=2e-4)
+            np.testing.assert_allclose(np.asarray(got_tot.n),
+                                       np.asarray(ref_tot.n),
+                                       rtol=1e-5, atol=1e-5)
+            st = TR.make_stats_fn(cfg, mesh)(gmm, fp, None)
+            np.testing.assert_array_equal(np.asarray(st.n),
+                                          np.asarray(ref_st.n))
+            np.testing.assert_array_equal(np.asarray(st.f),
+                                          np.asarray(ref_st.f))
+        print('MODEL_SHARD_OK')
+    """)
+    assert "MODEL_SHARD_OK" in out
