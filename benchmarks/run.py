@@ -39,7 +39,9 @@ def main() -> None:
     rows.append(("speed/posterior", "",
                  f"hlo_flop_ratio={po['hlo_flop_ratio_dense_over_sparse']:.1f}"
                  f";x_realtime_dense={po['dense']['x_realtime']:.0f}"
-                 f";x_realtime_sparse={po['sparse']['x_realtime']:.0f}"))
+                 f";x_realtime_sparse={po['sparse']['x_realtime']:.0f}"
+                 f";x_realtime_fused={po['fused']['x_realtime']:.0f}"
+                 f";wall_speedup_fused={po['wall_speedup_fused']:.2f}"))
     te = speed.tvm_estep_compare(C=64, D=12, R=32, Utt=64)
     rows.append((
         "speed/tvm_estep", "",
@@ -70,6 +72,14 @@ def main() -> None:
     rows.append(("roofline/summary", "",
                  f"cells_ok={s['cells_ok']};dominant={s['dominant_counts']};"
                  f"mean_rf={s['mean_roofline_fraction']:.4f}"))
+
+    # --- fused-alignment autotuner honesty table (DESIGN.md §12) -----------
+    at = roofline_table.autotune_table(smoke=True)
+    rows.append((
+        "roofline/autotune", "",
+        f"measured_cells={len(at['measured_cells'])}"
+        f";strategies_agree={at['all_measured_strategies_agree']}"
+        f";max_regret={at['max_tuning_regret']:.2f}"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

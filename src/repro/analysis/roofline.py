@@ -93,6 +93,131 @@ def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Fused-alignment block-size autotuner (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+# CPU profile for the same cost model: single-core container numbers
+# (measured GEMM throughput ~8e10 FLOP/s f32; streaming ~2e10 B/s). The
+# load-bearing difference from the TPU profile is gather_bw: row gathers
+# on the CPU jnp path materialise through scalar copy loops (~1.5 GB/s)
+# while the TPU kernel's sorted row DMAs run near HBM bandwidth — this is
+# what flips the union/full crossover between backends.
+CPU_HW = Hardware(name="cpu", peak_flops=8e10, hbm_bw=2e10, link_bw=1e9,
+                  hbm_bytes=4e9)
+
+# effective bandwidth of data-dependent row gathers per backend
+_GATHER_BW = {"tpu-v5e": 600e9, "cpu": 1.5e9}
+# exposed per-DMA issue overhead (scalar core), amortised by the
+# dma_depth-deep pipeline in the fused kernel
+_DMA_ISSUE_S = {"tpu-v5e": 10e-9, "cpu": 0.0}
+# whether row gathers overlap the rescore GEMM: the TPU kernel's DMA ring
+# prefetches the next tile's rows under the current tile's matmul, so the
+# gather hides under max(); the CPU jnp path runs take() then GEMM
+# sequentially, so its gather time is additive
+_GATHER_OVERLAP = {"tpu-v5e": True, "cpu": False}
+# on-chip budget for keeping the whole [C, E2] pack resident across
+# frame-tiles (half of VMEM on TPU; ~L2 on the CPU backend). Past this
+# the 'full' strategy re-streams the pack per tile — which is exactly
+# when the union gather's C/(BF·K) byte cut starts paying
+_RESIDENT_BYTES = {"tpu-v5e": 8e6, "cpu": 2e6}
+
+_ALIGN_BLOCK_F = (8, 16, 32, 64, 128)
+_ALIGN_DMA_DEPTH = (2, 4, 8)
+
+
+@dataclass(frozen=True)
+class AlignTune:
+    """Winning fused-alignment schedule for one (C, K, D, backend) cell."""
+    strategy: str            # 'union' (tile-union gather-GEMM) | 'full'
+    block_f: int             # frame-tile BF
+    dma_depth: int           # DMA semaphore ring depth
+    t_predicted: float       # cost-model seconds for `frames` frames
+    candidates: tuple = ()   # ((strategy, bf, depth, t_pred), ...) swept
+
+
+def align_cost_model(C: int, K: int, D: int, *, block_f: int,
+                     strategy: str, dma_depth: int = 4,
+                     frames: int = 4096, hw: Hardware = HW) -> float:
+    """Predicted seconds for the fused rescore stage of `frames` frames.
+
+    roofline t = max(flops/peak, bytes/bw) + exposed DMA issue overhead.
+    'union' gathers the sorted BF·K tile-union rows per frame-tile and
+    GEMMs against them (u = min(BF·K, C) distinct-row upper bound);
+    'full' streams the whole [C, E2] pack through one GEMM — no gather,
+    C/u more FLOPs. The preselect term is shared by every candidate and
+    therefore omitted.
+    """
+    E2 = 1 + D + D * (D + 1) // 2
+    tiles = -(-frames // block_f)
+    xe_bytes = 4.0 * frames * E2
+    gather_bw = _GATHER_BW.get(hw.name, hw.hbm_bw)
+    if strategy == "union":
+        u = min(block_f * K, C)
+        flops = 2.0 * frames * u * E2
+        gather_bytes = 4.0 * tiles * u * E2
+        t_gather = gather_bytes / gather_bw
+        t_issue = tiles * u * _DMA_ISSUE_S.get(hw.name, 0.0) / max(
+            dma_depth, 1)
+        if _GATHER_OVERLAP.get(hw.name, True):
+            t_mem = t_gather + xe_bytes / hw.hbm_bw
+        else:
+            # sequential gather-then-GEMM: the gather never hides under
+            # the matmul, so it lands outside the roofline max()
+            t_mem = xe_bytes / hw.hbm_bw
+            t_issue += t_gather
+    elif strategy == "full":
+        flops = 2.0 * frames * C * E2
+        pack_bytes = 4.0 * C * E2
+        if pack_bytes > _RESIDENT_BYTES.get(hw.name, 8e6):
+            pack_bytes *= tiles            # re-streamed every frame-tile
+        t_mem = (pack_bytes + xe_bytes) / hw.hbm_bw
+        t_issue = 0.0
+    else:
+        raise ValueError(f"strategy must be 'union' or 'full': {strategy!r}")
+    return max(flops / hw.peak_flops, t_mem) + t_issue
+
+
+_ALIGN_TUNE_CACHE: Dict[tuple, "AlignTune"] = {}
+
+
+def autotune_align(C: int, K: int, D: int, *, backend: Optional[str] = None,
+                   frames: int = 4096) -> AlignTune:
+    """Pick the fused-alignment schedule for one (C, K, D, backend) cell.
+
+    Sweeps (strategy, BF, dma_depth) through ``align_cost_model`` and
+    caches the winner — the sweep is pure arithmetic, so tuning happens
+    at trace time with no measurement; `benchmarks/roofline_table.py`
+    records predicted-vs-measured for every candidate into
+    ``BENCH_autotune.json`` to keep the model honest.
+    """
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    key = (C, K, D, backend)
+    hit = _ALIGN_TUNE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    hw = CPU_HW if backend == "cpu" else HW
+    rows = []
+    # 'full' first: exact ties (u == C makes both strategies pure
+    # whole-pack GEMMs FLOP-wise) resolve to the gather-free path
+    for strategy in ("full", "union"):
+        for bf in _ALIGN_BLOCK_F:
+            if bf > max(frames, 1):
+                continue
+            depths = _ALIGN_DMA_DEPTH if strategy == "union" else (4,)
+            for depth in depths:
+                t = align_cost_model(C, K, D, block_f=bf, strategy=strategy,
+                                     dma_depth=depth, frames=frames, hw=hw)
+                rows.append((strategy, bf, depth, t))
+    win = min(rows, key=lambda r: r[3])
+    tune = AlignTune(strategy=win[0], block_f=win[1], dma_depth=win[2],
+                     t_predicted=win[3], candidates=tuple(rows))
+    _ALIGN_TUNE_CACHE[key] = tune
+    return tune
+
+
 @dataclass
 class RooflineReport:
     arch: str

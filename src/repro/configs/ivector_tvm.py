@@ -32,12 +32,19 @@ class IVectorConfig:
     # alignment (paper §4.2): top-K pruning + posterior floor + renormalise
     posterior_top_k: int = 20
     posterior_floor: float = 0.025
-    # full-covariance scoring of the preselected set (DESIGN.md §8):
+    # full-covariance scoring of the preselected set (DESIGN.md §8, §12):
+    #   'fused'  - the single-kernel alignment pipeline (preselect, top-K,
+    #              coalesced gather, packed-symmetric GEMM rescore;
+    #              kernels/gmm_align.py): the same C/K FLOP cut as
+    #              'sparse' without its per-slot DMA cost — the fast path
+    #              on every backend; the roofline autotuner picks the
+    #              tile schedule per (C, K, D, backend)
     #   'sparse' - gather-and-rescore only the K selected components
     #              (kernels/gmm_rescore.py): a C/K (~100x at this scale)
     #              FLOP cut on the hottest path; the paper-regime default
     #   'dense'  - score all C densely and gather (vec-trick matmul);
     #              the CPU/reference fallback, wins at small C
+    # fallback ladder: fused -> sparse -> dense (DESIGN.md §12)
     rescore: str = "sparse"
     # TVM E-step linear-algebra layout (DESIGN.md §9):
     #   'packed' - symmetric operands (U_c, Phi+φφᵀ, A_c) live as their
@@ -102,7 +109,7 @@ class IVectorConfig:
 
         enum("formulation", {"standard", "augmented"})
         enum("ubm_update", {"none", "means", "full"})
-        enum("rescore", {"dense", "sparse"})
+        enum("rescore", {"dense", "sparse", "fused"})
         enum("estep", {"dense", "packed"})
         enum("estep_dtype", {"float32", "bfloat16"})
         for name in ("feat_dim", "n_components", "ivector_dim", "n_iters",

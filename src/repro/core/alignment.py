@@ -5,13 +5,19 @@ two-phase preselect → rescore pipeline:
 1. **preselect** — diagonal-covariance scores for all C (cheap matmul),
    top-K component ids per frame,
 2. **rescore_selected** — full-covariance log-likelihood of the selected
-   set, in one of two modes:
+   set, in one of three modes:
      'dense'  — evaluate all C densely (vec-trick MXU matmul, §2) and
                 gather K; the CPU/reference fallback, and the winner at
                 small C where the MXU is cheap and gathers are not,
      'sparse' — gather-and-rescore ONLY the K selected components
                 (`kernels.ops.gmm_rescore`, §8): the [F, C] score matrix
                 is never materialised — a C/K FLOP cut on the hot path,
+     'fused'  — packed-GEMM rescoring against the symmetric-packed
+                `align_pack` rows (`kernels.ops.gmm_rescore_fused`, §12):
+                the same C/K cut as 'sparse' with the gather coalesced
+                into tile-level GEMMs — the fast path on every backend
+                (on TPU the whole preselect→top-K→gather→rescore pipeline
+                runs as ONE Pallas kernel, `kernels/gmm_align.py`),
 3. intersect is free (softmax/floor already operate on the gathered
    [F, K] set, so both modes feed bit-identical downstream math), drop
    posteriors < floor, renormalise to sum 1.
@@ -60,7 +66,8 @@ def preselect(diag: U.DiagGMM, x, top_k: int):
 
 
 def rescore_selected(x, sel, full, diag_ll, *, precomp=None,
-                     rescore: str = "dense", rescore_pack=None):
+                     rescore: str = "dense", rescore_pack=None,
+                     align_pack=None):
     """Phase 2: loglik of the selected components -> [F, K].
 
     ``full`` None with no ``precomp`` scores the selected set with the
@@ -69,15 +76,24 @@ def rescore_selected(x, sel, full, diag_ll, *, precomp=None,
     alone is a full parameterisation (const/lin/precisions), so full-cov
     rescoring needs no GMM object. 'dense' evaluates all C and gathers
     (exact current-TPU adaptation); 'sparse' gathers first and scores
-    only K (``kernels.ops.gmm_rescore``), never materialising [F, C].
+    only K (``kernels.ops.gmm_rescore``), never materialising [F, C];
+    'fused' scores the selected set through the packed-symmetric GEMM
+    path (``kernels.ops.gmm_rescore_fused``; ``align_pack`` optionally
+    supplies the cached ``ubm.align_pack`` rows). All three agree to f32
+    rounding — 'dense' stays the reference fallback of the
+    fused→sparse→dense ladder (DESIGN.md §12).
     """
     if full is None and precomp is None:
         return jnp.take_along_axis(diag_ll, sel, axis=1)
     if rescore == "sparse":
         return U.full_rescore(full, x, sel, precomp=precomp,
                               pack=rescore_pack)
+    if rescore == "fused":
+        return U.full_rescore_fused(full, x, sel, precomp=precomp,
+                                    pack=align_pack)
     if rescore != "dense":
-        raise ValueError(f"rescore must be 'dense' or 'sparse': {rescore}")
+        raise ValueError(
+            f"rescore must be 'dense', 'sparse' or 'fused': {rescore}")
     ll = U.full_loglik(full, x, precomp=precomp)            # [F, C]
     return jnp.take_along_axis(ll, sel, axis=1)
 
@@ -105,13 +121,14 @@ def finalise_posteriors(sel_ll, floor: float, mask=None):
 def align_frames(x, full, diag: U.DiagGMM, *, top_k: int = 20,
                  floor: float = 0.025, precomp=None, mask=None,
                  with_loglik: bool = False, rescore: str = "dense",
-                 rescore_pack=None):
+                 rescore_pack=None, align_pack=None):
     """x: [F, D] -> sparse pruned-renormalised posteriors.
 
     Follows Kaldi/the paper: preselect with the diag UBM, score the
     selected components with the full UBM (``rescore`` mode: 'dense'
-    matmul-and-gather or 'sparse' gather-and-rescore — same selected set,
-    same downstream softmax/floor), floor + renormalise.
+    matmul-and-gather, 'sparse' gather-and-rescore, or 'fused'
+    packed-GEMM — same selected set, same downstream softmax/floor),
+    floor + renormalise.
 
     ``full`` may be None: the selected components are then scored with the
     diag UBM itself (the diag phase of UBM EM; with top_k == C and
@@ -127,7 +144,8 @@ def align_frames(x, full, diag: U.DiagGMM, *, top_k: int = 20,
     diag_ll, sel = preselect(diag, x, top_k)               # [F, C], [F, K]
     sel_ll = rescore_selected(x, sel, full, diag_ll, precomp=precomp,
                               rescore=rescore,
-                              rescore_pack=rescore_pack)   # [F, K]
+                              rescore_pack=rescore_pack,
+                              align_pack=align_pack)       # [F, K]
     post, lse = finalise_posteriors(sel_ll, floor, mask)
     out = SparsePosteriors(post, sel)
     return (out, lse) if with_loglik else out

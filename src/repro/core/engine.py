@@ -79,7 +79,8 @@ class EngineSpec:
     floor: float
     second_order: Optional[str] = None   # None | 'diag' | 'full'
     chunk: int = 0                       # utterances per scan chunk; 0 = all
-    rescore: str = "dense"               # 'dense' | 'sparse' (DESIGN.md §8)
+    rescore: str = "dense"               # 'dense' | 'sparse' | 'fused'
+    # (DESIGN.md §8, §12 — 'fused' is the packed-GEMM single-kernel path)
 
 
 class UBMPack(NamedTuple):
@@ -92,15 +93,18 @@ class UBMPack(NamedTuple):
     pre: Optional[Tuple]          # full_precisions(full)
     rescore_A: Optional[jax.Array] = None  # ubm.rescore_pack(pre): the
     # packed [C, 1+D+D²] gather rows the sparse rescoring kernel DMAs
+    align_A: Optional[jax.Array] = None    # ubm.align_pack(pre): the
+    # packed-symmetric [C, 1+D+D(D+1)/2] GEMM rows of the fused path
 
 
 def pack_ubm(ubm: U.FullGMM) -> UBMPack:
     pre = U.full_precisions(ubm)
-    return UBMPack(ubm, ubm.to_diag(), pre, U.rescore_pack(pre))
+    return UBMPack(ubm, ubm.to_diag(), pre, U.rescore_pack(pre),
+                   U.align_pack(pre))
 
 
 def pack_diag(gmm: U.DiagGMM) -> UBMPack:
-    return UBMPack(None, gmm, None, None)
+    return UBMPack(None, gmm, None, None, None)
 
 
 class ChunkStats(NamedTuple):
@@ -164,6 +168,11 @@ def _align_sharded(spec: EngineSpec, pack: UBMPack, x, m, axis: str):
         vals = ops.gmm_rescore(x, loc, fc, fl.T,
                                fP.reshape(fP.shape[0], -1),
                                pack=pack.rescore_A)
+    elif spec.rescore == "fused":
+        # fused packed-GEMM rescore of the selected slots against the
+        # local C-block's align_A rows ([C_loc, E2] — shards uniformly
+        # over 'model' like every other pack leaf)
+        vals = ops.gmm_rescore_fused(x, loc, pack.align_A)
     else:
         fc, fl, fP = pack.pre
         fll = ops.gmm_loglik(x, fc, fl.T, fP.reshape(fP.shape[0], -1))
@@ -197,7 +206,7 @@ def chunk_body(spec: EngineSpec, pack: UBMPack, feats_c,
         post, lse = AL.align_frames(
             x, pack.full, pack.diag, top_k=spec.top_k, floor=spec.floor,
             precomp=pack.pre, mask=m, with_loglik=True, rescore=spec.rescore,
-            rescore_pack=pack.rescore_A)
+            rescore_pack=pack.rescore_A, align_pack=pack.align_A)
         values, indices = post.values, post.indices
     else:
         values, indices, lse = _align_sharded(spec, pack, x, m, axis)

@@ -131,6 +131,29 @@ def posterior(model: TVModel, pre: Precomp, n, f, mean_only: bool = False,
         rhs = jax.lax.psum(rhs, axis)
     rhs = model.prior[None] + rhs
     chol = jnp.linalg.cholesky(L)
+    if pre.packed:
+        # posterior-assembly fast path (DESIGN.md §12): invert the
+        # Cholesky factor with the blocked matmul-only ``tri_inverse``
+        # and assemble Phi = G^{-T} G^{-1} as a batched syrk — batched
+        # ``cho_solve``/``triangular_solve`` lowers to a per-item LAPACK
+        # loop on CPU and to sequential substitutions on the MXU, while
+        # this path is pure GEMM work (measured 2.3× on the whole E-step
+        # tail, BENCH_tvm_estep.json). Dense mode keeps the cho_solve
+        # reference — the ladder's exactness oracle.
+        Gi = ops.tri_inverse(chol)
+        if mean_only:
+            # two triangular mat-vecs: phi = G^{-T} (G^{-1} rhs); Phi is
+            # never materialised at all
+            y = jnp.einsum("urs,us->ur", Gi, rhs,
+                           preferred_element_type=f32)
+            phi = jnp.einsum("usr,us->ur", Gi, y,
+                             preferred_element_type=f32)
+            return phi.astype(f32), None
+        Phi = jnp.einsum("uir,uis->urs", Gi, Gi,
+                         preferred_element_type=f32)
+        phi = jnp.einsum("urs,us->ur", Phi, rhs,
+                         preferred_element_type=f32)
+        return phi.astype(f32), Phi.astype(f32)
     phi = jax.scipy.linalg.cho_solve((chol, True), rhs[..., None])[..., 0]
     if mean_only:
         return phi.astype(f32), None
@@ -179,12 +202,18 @@ def em_accumulate(model: TVModel, pre: Precomp, n, f,
     """
     phi, Phi = posterior(model, pre, n, f, estep_dtype=estep_dtype,
                          axis=axis)
-    PP = Phi + phi[:, :, None] * phi[:, None, :]
     if pre.packed:
-        PPp = ops.pack_symmetric(PP)                           # [U, P]
+        # assemble Phi + φφᵀ DIRECTLY in packed form: pack Phi once and
+        # add the packed outer product φ_{i0} φ_{i1} — the dense [U, R, R]
+        # second moment never exists (DESIGN.md §12)
+        iu = jnp.triu_indices(model.rank)
+        i0, i1 = iu[0].astype(jnp.int32), iu[1].astype(jnp.int32)
+        PPp = (ops.pack_symmetric(Phi)
+               + jnp.take(phi, i0, axis=1) * jnp.take(phi, i1, axis=1))
         A = ops.tvm_estep_a(n, PPp, dtype=estep_dtype)         # [C, P]
         H = ops.unpack_symmetric(jnp.sum(PPp, axis=0), model.rank)
     else:
+        PP = Phi + phi[:, :, None] * phi[:, None, :]
         A = jnp.einsum("uc,urs->crs", n, PP)
         H = jnp.sum(PP, axis=0)
     B = jnp.einsum("ucd,ur->cdr", f, phi)

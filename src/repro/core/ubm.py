@@ -102,13 +102,30 @@ def full_loglik(gmm: FullGMM, x, precomp=None) -> jax.Array:
 def rescore_pack(precomp) -> jax.Array:
     """``full_precisions`` output -> [C, 1 + D + D²] packed rows
     A[c] = [const_c | lin_c | vec(P_c)] — the gather unit of the sparse
-    rescoring kernel (one row DMA per selected (frame, slot) pair; see
-    DESIGN.md §8). Built once per UBM alongside the precompute and cached
-    in ``engine.UBMPack`` / the serving session."""
+    rescoring kernel (DESIGN.md §8): per frame-tile the selected rows are
+    copied HBM→VMEM as one batch of coalesced row DMAs (sorted by id so
+    duplicate/adjacent components become near-sequential traffic; the
+    fused kernel pipelines them through a depth-``dma_depth`` semaphore
+    ring). Built once per UBM alongside the precompute and cached in
+    ``engine.UBMPack`` / the serving session."""
     from repro.kernels import ref
     const, lin, P = precomp
     C, D = lin.shape
     return ref.rescore_pack(const, lin.T, P.reshape(C, D * D))
+
+
+def align_pack(precomp) -> jax.Array:
+    """``full_precisions`` output -> [C, 1 + D + D(D+1)/2] packed-SYMMETRIC
+    rows A2[c] = [const_c | lin_c | -0.5·triu(P_c)] — the GEMM operand of
+    the fused alignment path (``rescore='fused'``, DESIGN.md §12): the
+    precision matrix is symmetric, so only the upper triangle rides along
+    (≈2× smaller rows than ``rescore_pack``) and the −0.5 quadratic weight
+    is folded in at pack time. Built once per UBM and cached in
+    ``engine.UBMPack.align_A`` / the serving session."""
+    from repro.kernels import ref
+    const, lin, P = precomp
+    C, D = lin.shape
+    return ref.align_pack(const, lin.T, P.reshape(C, D * D))
 
 
 def full_rescore(gmm, x, sel, precomp=None, pack=None) -> jax.Array:
@@ -120,6 +137,19 @@ def full_rescore(gmm, x, sel, precomp=None, pack=None) -> jax.Array:
     D = x.shape[1]
     return ops.gmm_rescore(x, sel, const, lin.T, P.reshape(-1, D * D),
                            pack=pack)
+
+
+def full_rescore_fused(gmm, x, sel, precomp=None, pack=None) -> jax.Array:
+    """x: [F, D], sel: [F, K] -> [F, K] selected logliks via the fused
+    packed-GEMM path (DESIGN.md §12): one GEMM against the
+    packed-symmetric ``align_pack`` rows instead of per-slot gathers.
+    Identical to ``full_rescore``/dense-then-gather to f32 rounding;
+    ``gmm`` may be None when ``precomp``/``pack`` is given."""
+    from repro.kernels import ops
+    if pack is None:
+        pack = align_pack(
+            precomp if precomp is not None else full_precisions(gmm))
+    return ops.gmm_rescore_fused(x, sel, pack)
 
 
 # ---------------------------------------------------------------------------
@@ -224,9 +254,9 @@ def train_ubm(x, C: int, key, diag_iters: int = 8, full_iters: int = 4,
     pseudo-utterances) or ragged-padded utterances [U, F, D] with ``mask``
     [U, F]. ``top_k`` prunes EM responsibilities (Kaldi's gselect); 0
     keeps all C components — exact dense EM. ``rescore`` ('dense' |
-    'sparse') picks how the full-covariance phase scores the selected
-    set (DESIGN.md §8); it only pays off with a pruned ``top_k``, and
-    the diag phase (no full-cov rescoring) ignores it.
+    'sparse' | 'fused') picks how the full-covariance phase scores the
+    selected set (DESIGN.md §8, §12); it only pays off with a pruned
+    ``top_k``, and the diag phase (no full-cov rescoring) ignores it.
 
     ``mesh`` runs both EM phases through the engine's sharded mode
     (pseudo-utterances over the data axes, components over 'model') —

@@ -18,10 +18,23 @@ FLOPs and HBM precision-block traffic. Dense wins when C is small or K
 approaches C (see DESIGN.md §8 for the crossover); the alignment layer
 keeps both paths selectable.
 
-The selected-id block rides in SMEM so row addresses are scalar reads;
-row DMAs are double-buffered (two in flight) via a 2-slot semaphore
-array. Each (frame, slot) destination row is distinct, so overlapping
-copies never alias.
+The selected-id block rides in SMEM so row addresses are scalar reads.
+Row DMAs are COALESCED, not issued in slot order: the BF·K ids are sorted
+in-kernel (iterative min-extraction, same scheme as the fused
+`gmm_align.py`) so consecutive copies walk `A` in ascending address order
+— adjacent and duplicate ids become near-sequential HBM traffic instead
+of BF·K random row touches — and up to ``dma_depth`` copies are kept in
+flight through a semaphore ring. Destination slots keep their original
+(frame, slot) positions (only the ISSUE order is sorted), so each
+destination row is distinct, overlapping copies never alias, and the
+rescore math below reads the gather in natural order with no inverse
+permutation.
+
+Even coalesced, this two-phase kernel re-reads the preselect scores from
+HBM to find its top-K; the fused `gmm_align.py` keeps them VMEM-resident
+and is the production path — see DESIGN.md §12 for the measured
+fused/sparse/dense crossover. This kernel remains the standalone
+reference for the gather-and-rescore contract.
 """
 from __future__ import annotations
 
@@ -34,28 +47,49 @@ from jax.experimental.pallas import tpu as pltpu
 
 f32 = jnp.float32
 
-# default frame-tile; the ops.py wrapper pads ragged F against this
+# default frame-tile / DMA ring depth; the ops.py wrapper pads ragged F
+# against BF and the autotuner (analysis/roofline.py) picks per-shape
 BLOCK_F = 8
+DMA_DEPTH = 4
 
 
-def _kernel(sel_ref, x_ref, a_ref, out_ref, gath_ref, sem_ref):
+def _kernel(sel_ref, x_ref, a_ref, out_ref, gath_ref, work_ref, sem_ref,
+            *, dma_depth: int):
     bf, K = out_ref.shape
+    n = bf * K
 
-    def row_dma(i, slot):
-        f, k = i // K, i % K
-        return pltpu.make_async_copy(
-            a_ref.at[sel_ref[f, k]], gath_ref.at[f, k], sem_ref.at[slot])
+    # sort-by-id issue order: the j-th copy moves the j-th smallest
+    # selected id, pipelined dma_depth deep (all copies are one [E] row,
+    # so any same-shaped ref pair serves for the ring's size bookkeeping)
+    work_ref[...] = sel_ref[...]
+    iota_f = jax.lax.broadcasted_iota(jnp.int32, (bf, K), 0)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (bf, K), 1)
+    flat = iota_f * K + iota_k                       # [BF, K] flat slots
 
-    row_dma(0, 0).start()
+    def issue(j, _):
+        w = work_ref[...]
+        m = jnp.min(w)                               # smallest id left
+        pos = jnp.min(jnp.where(w == m, flat, n))    # its (frame, slot)
+        work_ref[...] = jnp.where(flat == pos, jnp.int32(2 ** 30), w)
 
-    def body(i, carry):
-        @pl.when(i + 1 < bf * K)
+        @pl.when(j >= dma_depth)
         def _():
-            row_dma(i + 1, (i + 1) % 2).start()
-        row_dma(i, i % 2).wait()
-        return carry
+            pltpu.make_async_copy(
+                a_ref.at[m], gath_ref.at[0, 0],
+                sem_ref.at[j % dma_depth]).wait()
+        pltpu.make_async_copy(
+            a_ref.at[m], gath_ref.at[pos // K, pos % K],
+            sem_ref.at[j % dma_depth]).start()
+        return 0
 
-    jax.lax.fori_loop(0, bf * K, body, 0)
+    jax.lax.fori_loop(0, n, issue, 0)
+
+    def drain(j, _):
+        pltpu.make_async_copy(
+            a_ref.at[0], gath_ref.at[0, 0], sem_ref.at[j % dma_depth]).wait()
+        return 0
+
+    jax.lax.fori_loop(max(n - dma_depth, 0), n, drain, 0)
 
     x = x_ref[...].astype(f32)                       # [BF, D]
     d = x.shape[1]
@@ -76,9 +110,10 @@ def _kernel(sel_ref, x_ref, a_ref, out_ref, gath_ref, sem_ref):
     out_ref[...] = const_g + lin_t - 0.5 * quad
 
 
-@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_f", "dma_depth",
+                                              "interpret"))
 def gmm_rescore(x, sel, A, *, block_f: int = BLOCK_F,
-                interpret: bool = True):
+                dma_depth: int = DMA_DEPTH, interpret: bool = True):
     """x: [F, D]; sel: [F, K] int32 in [0, C); A: [C, E] packed rows
     (``ref.rescore_pack``, E >= 1 + D + D*D; extra columns are padding)
     -> [F, K] selected log-likelihoods."""
@@ -88,9 +123,11 @@ def gmm_rescore(x, sel, A, *, block_f: int = BLOCK_F,
     bf = min(block_f, F)
     assert F % bf == 0, (F, bf)
     assert E >= 1 + D + D * D, (E, D)
+    depth = max(1, min(dma_depth, bf * K))
     grid = (F // bf,)
+    kernel = functools.partial(_kernel, dma_depth=depth)
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bf, K), lambda i: (i, 0),
@@ -102,7 +139,8 @@ def gmm_rescore(x, sel, A, *, block_f: int = BLOCK_F,
         out_shape=jax.ShapeDtypeStruct((F, K), f32),
         scratch_shapes=[
             pltpu.VMEM((bf, K, E), f32),
-            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((bf, K), jnp.int32),          # sort workspace
+            pltpu.SemaphoreType.DMA((depth,)),
         ],
         interpret=interpret,
     )(sel, x, A)

@@ -19,6 +19,8 @@ from repro.kernels import gmm_rescore as _gr
 from repro.kernels import ref
 from repro.kernels import tvm_estep as _te
 
+f32 = jnp.float32
+
 _USE_PALLAS = contextvars.ContextVar("repro_use_pallas", default=False)
 _INTERPRET = contextvars.ContextVar("repro_pallas_interpret", default=True)
 
@@ -87,6 +89,93 @@ def gmm_rescore(x, sel, const, lin, P_flat, pack=None, **kw):
         out = _gr.gmm_rescore(x, sel, A, interpret=_INTERPRET.get(), **kw)
         return out[:F] if Fp != F else out
     return ref.gmm_rescore(x, sel, const, lin, P_flat)
+
+
+def align_expand_operand(D: int, E2: int):
+    """[D*D, E2] 0/1 selection operand mapping vec(x x^T) to the packed
+    quadratic columns of ``ref.expand_quadratic``: both (i, j) and (j, i)
+    of an off-diagonal pair route to the same packed column with weight 1,
+    so ``x2 @ op`` reproduces the doubled off-diagonal terms as a MATMUL —
+    the in-kernel expansion needs no data-dependent gathers."""
+    i0, i1, _ = ref._quad_pairs(D)
+    P2 = i0.shape[0]
+    cols = jnp.arange(P2, dtype=jnp.int32) + 1 + D
+    op = jnp.zeros((D * D, E2), f32)
+    op = op.at[i0 * D + i1, cols].add(1.0)
+    op = op.at[i1 * D + i0, cols].add(jnp.where(i0 == i1, 0.0, 1.0))
+    return op
+
+
+def gmm_rescore_fused(x, sel, A2, *, strategy=None, block_f=None, **kw):
+    """Fused packed-GEMM rescoring (DESIGN.md §12): loglik of the selected
+    components via one GEMM against the packed-symmetric ``align_pack``
+    rows instead of per-slot row gathers.
+
+    x: [F, D]; sel: [F, K] component ids; A2: [C, E2]. ``strategy``/
+    ``block_f`` default to the roofline autotuner's pick for this
+    (C, K, D, backend) cell (``analysis.roofline.autotune_align``).
+    Same pad-and-clip contract as ``gmm_rescore``: ragged F is zero-padded
+    to the frame-tile and sliced back, ids are clipped into [0, C).
+    """
+    F, D = x.shape
+    C = A2.shape[0]
+    K = sel.shape[1]
+    if strategy is None or block_f is None:
+        from repro.analysis.roofline import autotune_align
+        tune = autotune_align(C=C, K=K, D=D)
+        strategy = strategy or tune.strategy
+        block_f = block_f or tune.block_f
+    sel = jnp.clip(sel.astype(jnp.int32), 0, C - 1)
+    bf = max(1, min(block_f, F))
+    Fp = _ceil_to(F, bf)
+    if Fp != F:
+        x = jnp.pad(x, ((0, Fp - F), (0, 0)))
+        sel = jnp.pad(sel, ((0, Fp - F), (0, 0)))
+    out = ref.gmm_rescore_fused(x, sel, A2, strategy=strategy, block_f=bf)
+    return out[:F] if Fp != F else out
+
+
+def gmm_align(x, dconst, dlin, dquad, A2, *, top_k: int, block_f=None,
+              dma_depth=None, **kw):
+    """The whole fused alignment front half: diag preselect + top-K +
+    coalesced gather + packed rescore -> (sel_ll [F, K], sel [F, K]).
+
+    Routes to the single fused Pallas kernel (`kernels/gmm_align.py`)
+    under ``use_pallas``; the jnp path composes the same stages (shared
+    ``lax.top_k`` preselect + ``gmm_rescore_fused``) so both produce the
+    identical selected set and scores to f32 rounding. dconst: [C];
+    dlin/dquad: [D, C] diag score coefficients; A2: [C, E2].
+    """
+    F, D = x.shape
+    C = A2.shape[0]
+    if block_f is None or dma_depth is None:
+        from repro.analysis.roofline import autotune_align
+        tune = autotune_align(C=C, K=top_k, D=D)
+        block_f = block_f or tune.block_f
+        dma_depth = dma_depth or tune.dma_depth
+    if _USE_PALLAS.get():
+        from repro.kernels import gmm_align as _ga
+        E2 = A2.shape[1]
+        bf = max(1, min(block_f, F))
+        Fp = _ceil_to(F, bf)
+        if Fp != F:
+            x = jnp.pad(x, ((0, Fp - F), (0, 0)))
+        sexp = align_expand_operand(D, E2)
+        ll, sel = _ga.gmm_align(
+            x, dconst[None, :], dlin, dquad, sexp, A2, top_k=top_k,
+            block_f=bf, dma_depth=dma_depth,
+            interpret=_INTERPRET.get(), **kw)
+        return (ll[:F], sel[:F]) if Fp != F else (ll, sel)
+    scores = (dconst[None]
+              + jnp.dot(x, dlin, preferred_element_type=f32)
+              + jnp.dot(x * x, dquad, preferred_element_type=f32))
+    _, sel = jax.lax.top_k(scores, top_k)
+    sel = sel.astype(jnp.int32)
+    ll = gmm_rescore_fused(x, sel, A2, block_f=block_f)
+    return ll, sel
+
+
+tri_inverse = ref.tri_inverse
 
 
 def bw_stats(gamma, x, **kw):

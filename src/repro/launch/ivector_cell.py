@@ -52,7 +52,8 @@ def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
         floor=cfg.posterior_floor,
         second_order="full" if second_order else None,
         chunk=0, rescore=getattr(cfg, "rescore", "dense"))
-    pack = EN.UBMPack(None, diag_gmm, full_pre, U.rescore_pack(full_pre))
+    pack = EN.UBMPack(None, diag_gmm, full_pre, U.rescore_pack(full_pre),
+                      U.align_pack(full_pre))
     (tot,), nf = EN.stream(spec, pack, feats_c, None,
                            (EN.TotalsAccum(spec, D),), collect_nf=True,
                            mesh=mesh, exit_reduce="psum")
@@ -133,8 +134,18 @@ def model_flops(cfg, n_utts: int) -> float:
                   cfg.posterior_top_k)
     F = n_utts * cfg.frames_per_utt
     align = 2.0 * F * 2 * D * C                    # diag preselect matmuls
-    if getattr(cfg, "rescore", "dense") == "sparse":
+    mode = getattr(cfg, "rescore", "dense")
+    if mode == "sparse":
         align += 2.0 * F * K * (D * D + D)         # gather-and-rescore K
+    elif mode == "fused":
+        # packed-symmetric GEMM against the autotuned tile schedule
+        # (DESIGN.md §12): E2 columns per row, u = tile-union rows for the
+        # 'union' strategy (C/(BF·K) cut) or all C for 'full'
+        from repro.analysis.roofline import autotune_align
+        E2 = 1 + D + D * (D + 1) // 2
+        tune = autotune_align(C, K, D, backend="tpu")
+        u = min(tune.block_f * K, C) if tune.strategy == "union" else C
+        align += 2.0 * F * u * E2
     else:
         align += 2.0 * F * (D * D + D) * C         # dense loglik matmuls
     stats = 2.0 * F * K * (D * D + D)              # sparse accumulation

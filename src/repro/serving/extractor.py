@@ -5,10 +5,11 @@ ragged — one utterance per request, each a different number of frames. This
 module turns the trained (UBM, TVM) pair into a serving session:
 
   * **cached precompute** — ``full_precisions(ubm)`` (Cholesky + inverse of
-    C full covariances), the diag preselection GMM, the packed sparse-
-    rescoring rows (``ubm.rescore_pack``, DESIGN.md §8), and
-    ``TV.precompute`` (T^T Σ^{-1} T) are computed once per session, not
-    once per call;
+    C full covariances), the diag preselection GMM, the packed rescoring
+    rows for both sparse and fused alignment (``ubm.rescore_pack`` /
+    ``ubm.align_pack``, DESIGN.md §8/§12, carried in ``engine.UBMPack``),
+    and ``TV.precompute`` (T^T Σ^{-1} T) are computed once per session,
+    not once per call;
   * **power-of-two frame buckets** — each utterance is zero-padded (with a
     frame mask) to the next power-of-two frame count, so the number of
     distinct jitted shapes is O(log max_frames) instead of O(#lengths);

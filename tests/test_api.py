@@ -73,6 +73,10 @@ def test_validate_passes_through_good_configs():
     CFG.with_overrides(realign_interval=2, ubm_update="full")
     CFG.with_overrides(estep="packed", estep_dtype="bfloat16")
     CFG.with_overrides(formulation="standard", min_divergence=False)
+    # all three rescore schedules are valid (fused is the single-kernel
+    # alignment path, DESIGN.md §12)
+    for mode in ("dense", "sparse", "fused"):
+        CFG.with_overrides(rescore=mode)
 
 
 def test_recipe_from_config_validates():

@@ -182,8 +182,9 @@ def test_mini_dryrun_multipod_compiles():
 def test_sharded_sparse_rescore_matches_dense():
     """The owner-local sharded alignment (components over 'model') gives
     the same Baum-Welch stats whether each rank scores its whole C-block
-    densely or gather-and-rescores only the selected slots (DESIGN.md
-    §8) — the collectives are identical, only the rank-local scoring
+    densely, gather-and-rescores only the selected slots (DESIGN.md §8),
+    or runs the fused packed-GEMM rescore on its local block (DESIGN.md
+    §12) — the collectives are identical, only the rank-local scoring
     changes."""
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
@@ -204,14 +205,15 @@ def test_sharded_sparse_rescore_matches_dense():
         feats = jax.random.normal(jax.random.fold_in(key, 2), (8, 32, D))
         pre = U.full_precisions(ubm)
         outs = {}
-        for mode in ('dense', 'sparse'):
+        for mode in ('dense', 'sparse', 'fused'):
             c = cfg.with_overrides(rescore=mode)
             with mesh:
                 outs[mode] = IC.sharded_align_stats(
                     c, mesh, ubm.to_diag(), pre, feats, True)
-        for a, b in zip(outs['dense'], outs['sparse']):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       rtol=1e-4, atol=1e-4)
+        for mode in ('sparse', 'fused'):
+            for a, b in zip(outs['dense'], outs[mode]):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-4, atol=1e-4)
         print('SPARSE_SHARD_OK')
     """)
     assert "SPARSE_SHARD_OK" in out

@@ -131,19 +131,21 @@ def test_sparse_rescore_matches_dense_any_k(seed, top_k):
     feats = jnp.where(mask[:, :, None] > 0, feats, garbage)
     pack = EN.pack_ubm(ubm)
     outs = {}
-    for mode in ("dense", "sparse"):
+    for mode in ("dense", "sparse", "fused"):
         spec = EN.EngineSpec(n_components=C, top_k=top_k, floor=0.025,
                              second_order="full", chunk=2, rescore=mode)
         outs[mode] = EN.stream_bw(spec, pack, feats, mask)
-    (bw_d, (ll_d, fr_d)), (bw_s, (ll_s, fr_s)) = outs["dense"], outs["sparse"]
-    np.testing.assert_allclose(np.asarray(bw_s.n), np.asarray(bw_d.n),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(bw_s.f), np.asarray(bw_d.f),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(bw_s.S), np.asarray(bw_d.S),
-                               rtol=1e-4, atol=1e-4)
-    np.testing.assert_allclose(float(ll_s), float(ll_d), rtol=1e-5)
-    assert float(fr_s) == float(fr_d)
+    bw_d, (ll_d, fr_d) = outs["dense"]
+    for mode in ("sparse", "fused"):
+        bw_s, (ll_s, fr_s) = outs[mode]
+        np.testing.assert_allclose(np.asarray(bw_s.n), np.asarray(bw_d.n),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(bw_s.f), np.asarray(bw_d.f),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(bw_s.S), np.asarray(bw_d.S),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(ll_s), float(ll_d), rtol=1e-5)
+        assert float(fr_s) == float(fr_d)
 
 
 def test_sparse_rescore_keeps_argmax_floor_invariant():
@@ -155,7 +157,7 @@ def test_sparse_rescore_keeps_argmax_floor_invariant():
     ubm = _toy_ubm(key, C, D)
     x = jax.random.normal(jax.random.fold_in(key, 1), (F, D))
     pre = U.full_precisions(ubm)
-    for mode in ("dense", "sparse"):
+    for mode in ("dense", "sparse", "fused"):
         post = AL.align_frames(x, ubm, ubm.to_diag(), top_k=4, floor=0.99,
                                precomp=pre, rescore=mode)
         sums = np.asarray(jnp.sum(post.values, axis=1))
@@ -166,7 +168,8 @@ def test_sparse_rescore_keeps_argmax_floor_invariant():
 
 def test_sparse_rescore_loglik_values_match_dense_gather():
     """The rescored [F, K] logliks themselves (not just the posteriors)
-    agree between ubm.full_rescore and dense full_loglik + gather."""
+    agree between ubm.full_rescore / ubm.full_rescore_fused and dense
+    full_loglik + gather."""
     key = jax.random.fold_in(KEY, 41)
     C, D, F, K = 8, 5, 24, 3
     ubm = _toy_ubm(key, C, D)
@@ -174,9 +177,12 @@ def test_sparse_rescore_loglik_values_match_dense_gather():
     pre = U.full_precisions(ubm)
     _, sel = AL.preselect(ubm.to_diag(), x, K)
     sparse = U.full_rescore(ubm, x, sel, precomp=pre)
+    fused = U.full_rescore_fused(ubm, x, sel, precomp=pre)
     dense = jnp.take_along_axis(U.full_loglik(ubm, x, precomp=pre), sel,
                                 axis=1)
     np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(dense),
                                rtol=1e-5, atol=1e-5)
 
 

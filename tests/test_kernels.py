@@ -115,6 +115,73 @@ def test_gmm_rescore_cached_pack_matches():
     np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# Fused single-kernel alignment: preselect + top-K + gather + rescore
+# (DESIGN.md §12) — interpret mode vs the two-phase reference
+# ---------------------------------------------------------------------------
+
+
+def _fused_inputs(key, C, D, F):
+    const, lin, P = _spd_precisions(key, C, D)
+    dconst = jax.random.normal(jax.random.fold_in(key, 10), (C,))
+    dlin = jax.random.normal(jax.random.fold_in(key, 11), (D, C))
+    dquad = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 12),
+                                       (D, C))) - 0.1
+    x = jax.random.normal(jax.random.fold_in(key, 13), (F, D))
+    A2 = ref.align_pack(const, lin, P)
+    return x, dconst, dlin, dquad, (const, lin, P), A2
+
+
+@pytest.mark.parametrize("C,D,K,F,bf,depth", [
+    (32, 5, 4, 64, 8, 2),
+    (64, 12, 8, 64, 16, 4),
+    (37, 7, 5, 48, 8, 8),      # ragged C, deep ring
+    (16, 3, 16, 24, 8, 4),     # K == C
+    (24, 6, 3, 40, 8, 1),      # depth 1: fully serialised DMAs
+])
+def test_gmm_align_fused_kernel(C, D, K, F, bf, depth):
+    """The fused Pallas kernel (interpret) == diag preselect + lax.top_k
+    + dense-then-gather, ids and logliks both, across tile schedules
+    including the autotuner's candidate block sizes."""
+    x, dconst, dlin, dquad, (const, lin, P), A2 = _fused_inputs(
+        k(50 + C), C, D, F)
+    from repro.kernels import gmm_align as GA
+    E2 = A2.shape[1]
+    sexp = ops.align_expand_operand(D, E2)
+    ll, sel = GA.gmm_align(x, dconst[None, :], dlin, dquad, sexp, A2,
+                           top_k=K, block_f=bf, dma_depth=depth,
+                           interpret=True)
+    scores = dconst[None, :] + x @ dlin + (x * x) @ dquad
+    _, want_sel = jax.lax.top_k(scores, K)
+    assert (np.sort(np.asarray(sel), 1)
+            == np.sort(np.asarray(want_sel), 1)).all()
+    want_ll = jnp.take_along_axis(ref.gmm_loglik(x, const, lin, P),
+                                  sel, axis=1)
+    np.testing.assert_allclose(np.asarray(ll), np.asarray(want_ll),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_gmm_align_wrapper_autotuned_configs():
+    """`ops.gmm_align` under the Pallas flag == the jnp path, at every
+    candidate block config the autotuner sweeps for this cell (the
+    schedule must change the schedule, never the numbers)."""
+    from repro.analysis.roofline import autotune_align
+    C, D, K, F = 48, 8, 6, 32
+    x, dconst, dlin, dquad, _, A2 = _fused_inputs(k(70), C, D, F)
+    ll_ref, sel_ref_ = ops.gmm_align(x, dconst, dlin, dquad, A2, top_k=K)
+    tune = autotune_align(C, K, D, backend="cpu", frames=F)
+    swept = sorted({(bf, dp) for _, bf, dp, _ in tune.candidates
+                    if bf <= F})[:4]
+    for bf, dp in swept:
+        with ops.use_pallas(True):
+            ll, sel = ops.gmm_align(x, dconst, dlin, dquad, A2, top_k=K,
+                                    block_f=bf, dma_depth=dp)
+        np.testing.assert_array_equal(np.asarray(sel),
+                                      np.asarray(sel_ref_))
+        np.testing.assert_allclose(np.asarray(ll), np.asarray(ll_ref),
+                                   rtol=3e-5, atol=3e-5)
+
+
 @pytest.mark.parametrize("F,D,C", [(256, 8, 32), (512, 16, 64)])
 def test_bw_stats(F, D, C):
     x = jax.random.normal(k(5), (F, D))

@@ -233,6 +233,51 @@ def test_sharded_trajectory_bit_exact_8dev():
     assert "BITEXACT_OK" in out
 
 
+def test_sharded_trajectory_fused_matches_dense_8dev():
+    """The fused rescore mode on an (8, 1) data mesh tracks the dense
+    single-device 3-iteration trajectory: fused is a rescoring schedule,
+    not a different model — T subspaces, extracted i-vectors, and EER
+    agree to fp tolerance (the packed-GEMM reassociates the quadratic
+    form, so bit-exactness is not the contract — DESIGN.md §12)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.ivector_tvm import SMOKE
+        from repro.core import trainer as TR
+        from repro.data.speech import SpeechDataConfig, build_dataset
+        from repro.core import ubm as U
+        data = SpeechDataConfig(feat_dim=8, n_components=8, n_speakers=12,
+                                utts_per_speaker=4, frames_per_utt=40,
+                                speaker_rank=6, channel_rank=3,
+                                speaker_scale=0.8, channel_scale=0.8)
+        feats, labels = build_dataset(data)   # 48 utts
+        gmm = U.train_ubm(feats.reshape(-1, 8), 16, jax.random.PRNGKey(0))
+        base = SMOKE.with_overrides(feat_dim=8, n_components=16,
+                                    ivector_dim=12, posterior_top_k=8,
+                                    lda_dim=8, n_iters=3,
+                                    update_sigma=True,
+                                    estep_chunk=feats.shape[0] // 8)
+        key = jax.random.PRNGKey(100)
+        ref = TR.train(base.with_overrides(rescore='dense'), gmm, feats,
+                       key=key, mesh=(1, 1))
+        cfg = base.with_overrides(rescore='fused')
+        got = TR.train(cfg, gmm, feats, key=key, mesh=(8, 1))
+        TTt = lambda T: np.asarray(jnp.einsum('cdr,cer->cde', T, T))
+        np.testing.assert_allclose(TTt(got.model.T), TTt(ref.model.T),
+                                   rtol=5e-3, atol=5e-3)
+        np.testing.assert_allclose(np.asarray(got.model.Sigma),
+                                   np.asarray(ref.model.Sigma),
+                                   rtol=1e-3, atol=1e-4)
+        from repro.api import artifacts as AR
+        iv_ref = TR.extract(base, ref, feats, mesh=(1, 1))
+        iv_got = TR.extract(cfg, got, feats, mesh=(8, 1))
+        e_ref, _ = AR.evaluate_ivectors(base, iv_ref, labels, 0)
+        e_got, _ = AR.evaluate_ivectors(cfg, iv_got, labels, 0)
+        assert abs(e_got - e_ref) < 0.01, (e_got, e_ref)
+        print('FUSED_SHARD_OK', e_got)
+    """)
+    assert "FUSED_SHARD_OK" in out
+
+
 def test_model_sharded_mesh_matches_to_tolerance():
     """Component-sharded meshes ((4,2), (1,8)) reassociate the model-axis
     contraction, so one fused macro-step agrees to fp tolerance (not

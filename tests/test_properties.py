@@ -9,7 +9,7 @@ except ImportError:           # keep tier-1 collection alive without it
     from _hyp_fallback import given, settings, strategies as st
 
 from repro.core import backend as BK
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 CONFIG = dict(max_examples=20, deadline=None)
 
@@ -62,6 +62,32 @@ def test_gmm_rescore_equals_dense_gather(seed, D, K):
     got = ref.gmm_rescore(x, sel, const, lin, P)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+@settings(**CONFIG)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.integers(1, 12))
+def test_gmm_rescore_fused_equals_dense_gather(seed, D, K):
+    """Fused packed-GEMM rescore == dense scoring followed by gather,
+    both 'full' and 'union' tile schedules, for any (D, K) including
+    K == C, with duplicate/boundary selected ids and ragged F (the ops
+    wrapper pads F=20 against block_f=8)."""
+    C = 12
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (20, D))
+    const = jax.random.normal(jax.random.fold_in(k, 1), (C,))
+    lin = jax.random.normal(jax.random.fold_in(k, 2), (D, C))
+    A = jax.random.normal(jax.random.fold_in(k, 3), (C, D, D)) * 0.4
+    P = (jnp.einsum("cij,ckj->cik", A, A) + jnp.eye(D)).reshape(C, D * D)
+    sel = jax.random.randint(jax.random.fold_in(k, 4), (20, K), 0, C)
+    sel = sel.at[0, 0].set(0).at[-1, -1].set(C - 1)   # boundary ids
+    want = jnp.take_along_axis(ref.gmm_loglik(x, const, lin, P), sel,
+                               axis=1)
+    A2 = ref.align_pack(const, lin, P)
+    for strategy in ("full", "union"):
+        got = ops.gmm_rescore_fused(x, sel, A2, strategy=strategy,
+                                    block_f=8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
 
 
 @settings(**CONFIG)

@@ -180,8 +180,11 @@ def test_posterior_packed_equals_dense(formulation):
 
 
 def test_posterior_mean_only_equals_full():
-    """The mean-only path (no identity-RHS covariance solve) returns the
-    same phi — the serving/pipeline scoring perf fix is free."""
+    """The mean-only path (no posterior-covariance materialisation)
+    returns the same phi — the serving/pipeline scoring perf fix is free.
+    Dense stays bit-identical (same cho_solve, narrower RHS); the packed
+    fast path reassociates the triangular solve (Giᵀ(Gi·rhs) vs
+    (GiᵀGi)·rhs, DESIGN.md §9/§12), so it agrees to fp tolerance only."""
     model = _toy_model(k(9))
     n, f = _toy_stats(k(10))
     for estep in ("dense", "packed"):
@@ -189,11 +192,18 @@ def test_posterior_mean_only_equals_full():
         phi_full, Phi = TV.posterior(model, pre, n, f)
         phi_mean, none = TV.posterior(model, pre, n, f, mean_only=True)
         assert none is None and Phi is not None
-        np.testing.assert_array_equal(np.asarray(phi_mean),
-                                      np.asarray(phi_full))
+        if estep == "dense":
+            np.testing.assert_array_equal(np.asarray(phi_mean),
+                                          np.asarray(phi_full))
+        else:
+            np.testing.assert_allclose(np.asarray(phi_mean),
+                                       np.asarray(phi_full),
+                                       rtol=1e-4, atol=1e-5)
         np.testing.assert_allclose(
             TV.extract_ivectors(model, pre, n, f),
-            phi_full - model.prior[None], rtol=1e-6)
+            phi_full - model.prior[None],
+            rtol=1e-6 if estep == "dense" else 1e-4,
+            atol=0.0 if estep == "dense" else 1e-5)
 
 
 @pytest.mark.parametrize("chunk", [5, 17, 100])   # ragged tails + one-shot
@@ -217,7 +227,15 @@ def test_em_accumulate_packed_equals_dense(chunk):
     np.testing.assert_allclose(m_p.T, m_d.T, rtol=1e-4, atol=1e-4)
     md_d = TV.min_divergence(model, acc_d)
     md_p = TV.min_divergence(model, acc_p)
-    np.testing.assert_allclose(md_p.T, md_d.T, rtol=1e-4, atol=1e-4)
+    # min-divergence whitening goes through an eigendecomposition whose
+    # eigenvector SIGNS are arbitrary under fp-last-bit input differences
+    # (the packed fast path agrees to ~1e-7, not bit-exactly) — compare
+    # the sign-invariant per-component subspace T_c T_cᵀ, as the trainer
+    # parity test does
+    np.testing.assert_allclose(
+        np.asarray(jnp.einsum("cdr,cer->cde", md_p.T, md_p.T)),
+        np.asarray(jnp.einsum("cdr,cer->cde", md_d.T, md_d.T)),
+        rtol=1e-4, atol=1e-4)
 
 
 def test_zero_occupancy_components_and_empty_utterances():
@@ -307,3 +325,54 @@ def test_trainer_bf16_estep_trains(tiny_system):
     assert np.isfinite(ivecs).all()
     eer = evaluate_state(cfg, state, feats, labels)
     assert eer < 0.45, eer
+
+
+# ---------------------------------------------------------------------------
+# The matmul-only posterior-assembly fast path (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("R,block", [(5, 16), (16, 16), (37, 16), (64, 8)])
+def test_tri_inverse_matches_triangular_solve(R, block):
+    """Blocked matmul-only triangular inverse == the lapack reference,
+    across ragged ranks (non-multiples of the block), with the inverse
+    strictly lower-triangular like its input."""
+    key = k(60)
+    M = jax.random.normal(key, (6, R, R))
+    L = jnp.matmul(M, jnp.swapaxes(M, -1, -2)) + 3.0 * jnp.eye(R)
+    G = jnp.linalg.cholesky(L)
+    Gi = ops.tri_inverse(G, block=block)
+    resid = np.abs(np.asarray(jnp.matmul(G, Gi)) - np.eye(R)).max()
+    assert resid < 1e-5, resid
+    want = jax.scipy.linalg.solve_triangular(
+        G, jnp.broadcast_to(jnp.eye(R), G.shape), lower=True)
+    np.testing.assert_allclose(np.asarray(Gi), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+    # strictly triangular: no garbage above the diagonal
+    iu = np.triu_indices(R, 1)
+    assert np.abs(np.asarray(Gi)[:, iu[0], iu[1]]).max() == 0.0
+
+
+def test_posterior_packed_fast_path_matches_cho_solve():
+    """The packed posterior assembly (tri_inverse + syrk, never a
+    batched cho_solve) agrees with the dense cho_solve reference on both
+    phi and Phi, and em_accumulate's direct packed PP assembly (never a
+    dense [U, R, R] PP) matches the dense accumulator."""
+    model = _toy_model(k(61), C=10, D=5, R=23)   # ragged vs block=16
+    n, f = _toy_stats(k(62), Utt=13, C=10, D=5)
+    pre_d = TV.precompute(model, estep="dense")
+    pre_p = TV.precompute(model, estep="packed")
+    phi_d, Phi_d = TV.posterior(model, pre_d, n, f)
+    phi_p, Phi_p = TV.posterior(model, pre_p, n, f)
+    np.testing.assert_allclose(np.asarray(phi_p), np.asarray(phi_d),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Phi_p), np.asarray(Phi_d),
+                               rtol=1e-4, atol=1e-5)
+    acc_d = TV.em_accumulate(model, pre_d, n, f)
+    acc_p = TV.em_accumulate(model, pre_p, n, f)
+    R = model.rank
+    np.testing.assert_allclose(
+        np.asarray(ops.unpack_symmetric(acc_p.A, R)), np.asarray(acc_d.A),
+        rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(acc_p.B), np.asarray(acc_d.B),
+                               rtol=1e-4, atol=1e-4)
