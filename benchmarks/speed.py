@@ -581,6 +581,149 @@ def run_scale(smoke: bool = False, out_path=None):
     return r
 
 
+# -- resilience: guardrail overhead + recovery per fault class -------------
+
+
+def resilience_compare(C=256, D=20, R=64, Utt=64, F=256, n_steps=3,
+                       seed=0):
+    """DESIGN.md §13: what failure-domain hardening costs and buys.
+
+    Overhead side: the numerical guardrail (`core.guardrails.check_state`)
+    runs on the host after every supervised macro-step — its median wall
+    time over the step's own median gives the per-step tax the ≤5% gate
+    bounds (measured directly rather than as an end-to-end on/off delta,
+    which at CPU bench scale would drown in scheduler noise).
+
+    Recovery side: one supervised run per chaos fault class (host loss,
+    mid-step device loss, NaN batch, corrupted latest checkpoint,
+    straggler past the step deadline), each reporting the supervisor's
+    measured fault→state-restored time and whether the recovered
+    trajectory is bit-exact against the clean run — the drills of
+    tests/test_resilience.py, quantified.
+    """
+    import tempfile
+
+    from repro.core import guardrails as GR
+    from repro.distributed import fault_tolerance as FT
+
+    key = jax.random.PRNGKey(seed)
+    ubm = _synthetic_full_ubm(key, C, D)
+    from repro.configs.ivector_tvm import SMOKE
+    cfg = SMOKE.with_overrides(
+        feat_dim=D, n_components=C, ivector_dim=R,
+        posterior_top_k=min(16, C), utts_per_batch=Utt,
+        frames_per_utt=F, estep_chunk=Utt, n_iters=n_steps)
+    feats = jax.random.normal(jax.random.fold_in(key, 2), (Utt, F, D))
+    tkey = jax.random.fold_in(key, 3)
+
+    # -- guardrail overhead per macro-step ---------------------------------
+    model = TV.init_model(tkey, ubm.means, ubm.covs, R, cfg.formulation,
+                          cfg.prior_offset)
+    iter_fn = TR.make_iter_fn(cfg)
+    t_step = _timeit(lambda: iter_fn(model, ubm, feats, None), n=5)
+    model2, tot, diag = iter_fn(model, ubm, feats, None)
+    tree = TR._ckpt_tree(TR.TrainState(model=model2, ubm=ubm), tot)
+    metrics = jax.tree.map(float, diag)
+    jax.block_until_ready(tree)
+    gts = []
+    for _ in range(7):
+        t0 = time.perf_counter()
+        violations = GR.check_state(tree, metrics,
+                                    {"avg_loglik": metrics["avg_loglik"]})
+        gts.append(time.perf_counter() - t0)
+    gts.sort()
+    t_guard = gts[len(gts) // 2]
+    assert violations == [], violations
+
+    out = {
+        "config": {"n_components": C, "feat_dim": D, "rank": R,
+                   "utts": Utt, "frames_per_utt": F, "n_steps": n_steps},
+        "guardrail": {
+            "macro_step_seconds": t_step,
+            "guardrail_seconds": t_guard,
+            "overhead_fraction": t_guard / t_step,
+        },
+    }
+
+    # -- recovery time per fault class -------------------------------------
+    def supervised(chaos=None, policy=None, ckpt_dir=None):
+        t0 = time.perf_counter()
+        state, rep = TR.train_supervised(
+            cfg, ubm, feats, key=tkey, ckpt_dir=ckpt_dir, chaos=chaos,
+            policy=policy)
+        return state, rep, time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as d:
+        ref_state, ref_rep, t_clean = supervised(ckpt_dir=d)
+    ref_T = np.asarray(ref_state.model.T)
+
+    fault_cases = {
+        "host_loss": dict(chaos=FT.Chaos(
+            fail_at=lambda s, a: s == 2 and a == 0)),
+        "device_loss_mid_step": dict(chaos=FT.Chaos(
+            device_loss_at=lambda s, a: s == 1 and a == 0)),
+        "nan_batch": dict(chaos=FT.Chaos(
+            poison_at=lambda s, a: s == 1 and a == 0)),
+        "corrupt_checkpoint": dict(chaos=FT.Chaos(
+            corrupt_ckpt_at=lambda s, a: s == 1 and a == 0,
+            fail_at=lambda s, a: s == 2 and a == 0)),
+        "straggler_deadline": dict(
+            chaos=FT.Chaos(delay_at=lambda s, a: 1e6 if (s == 1 and a == 0)
+                           else 0.0),
+            policy=FT.RetryPolicy(max_restarts=5, step_deadline=3600.0)),
+    }
+    recovery = {}
+    for name, kw in fault_cases.items():
+        with tempfile.TemporaryDirectory() as d:
+            state, rep, wall = supervised(ckpt_dir=d, **kw)
+        recovery[name] = {
+            "n_restarts": rep.n_restarts,
+            "faults": [f["type"] for f in rep.faults],
+            "recovery_seconds": rep.faults[0]["recovery_s"],
+            "run_seconds": wall,
+            "overrun_vs_clean_seconds": wall - t_clean,
+            "bit_exact": bool(np.array_equal(
+                np.asarray(state.model.T), ref_T)),
+            "skipped_corrupt": list(rep.skipped_corrupt),
+        }
+    out["clean_run_seconds"] = t_clean
+    out["recovery"] = recovery
+    out["all_fault_classes_bit_exact"] = all(
+        r["bit_exact"] for r in recovery.values())
+    return out
+
+
+def run_resilience(smoke: bool = False, out_path=None):
+    """The `resilience` bench case: writes ``BENCH_resilience.json`` at
+    the repo root (CI runs the smoke scale so artifact generation can't
+    silently rot; the committed artifact is the full run).
+
+    Acceptance gates (full scale only — at smoke scale the macro-step is
+    a few ms and the host-side guardrail fraction is pure noise): the
+    numerical guardrail must cost <= 5% of a macro-step, and every chaos
+    fault class must recover bit-exactly."""
+    kw = (dict(C=32, D=8, R=16, Utt=16, F=64, n_steps=2) if smoke
+          else dict(C=256, D=20, R=64, Utt=64, F=256, n_steps=3))
+    r = resilience_compare(**kw)
+    r["smoke"] = smoke
+    thr = None if smoke else 0.05
+    frac = r["guardrail"]["overhead_fraction"]
+    exact = r["all_fault_classes_bit_exact"]
+    r["gate"] = {"max_guardrail_overhead_fraction": thr,
+                 "guardrail_overhead_fraction": frac,
+                 "all_fault_classes_bit_exact": exact,
+                 "passed": (thr is None or frac <= thr) and exact}
+    p = (Path(out_path) if out_path
+         else REPO_ROOT / "BENCH_resilience.json")
+    p.write_text(json.dumps(r, indent=2) + "\n")
+    if not r["gate"]["passed"]:
+        print(f"GATE FAILED: guardrail overhead {frac:.4f} > allowed "
+              f"{thr} per macro-step, or a fault class lost bit-exactness "
+              f"(bit_exact={exact})", file=sys.stderr)
+        raise SystemExit(1)
+    return r
+
+
 def end2end_recipe(n_iters: int = 2, seed: int = 0):
     """`recipe.run` wall time on the SMOKE-scale task: the full staged
     chain (features -> UBM -> TVM -> backend -> eval), so the perf
@@ -676,6 +819,9 @@ if __name__ == "__main__":
         print(json.dumps(r, indent=2))
     elif "scale" in sys.argv[1:]:
         r = run_scale(smoke="--smoke" in sys.argv[1:])
+        print(json.dumps(r, indent=2))
+    elif "resilience" in sys.argv[1:]:
+        r = run_resilience(smoke="--smoke" in sys.argv[1:])
         print(json.dumps(r, indent=2))
     elif "end2end" in sys.argv[1:]:
         print(json.dumps(end2end_recipe(), indent=2))

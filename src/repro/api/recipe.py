@@ -113,7 +113,7 @@ class IVectorRecipe:
     def run(self, data=None, seed: int = 0, n_iters: Optional[int] = None,
             eval_every: int = 0, bundle_dir=None, mask=None,
             ckpt_dir=None, ckpt_interval: int = 1,
-            mesh=None) -> RecipeResult:
+            mesh=None, supervised: bool = False) -> RecipeResult:
         """Drive every stage once; optionally save a versioned bundle.
 
         ``data``: None (built from ``data_cfg``), ``(feats, labels)``, or
@@ -126,12 +126,19 @@ class IVectorRecipe:
         threaded through every engine entry point, recorded in the run's
         provenance, and stripped from saved bundles (artifacts are
         substrate-independent).
+
+        ``supervised``: run the tvm stage under the fault-tolerance
+        supervisor (retry policy + numerical guardrails + verified-
+        checkpoint rollback, DESIGN.md §13; requires ``ckpt_dir``). Like
+        ``mesh``, a run-time knob: the resilience policy and what the
+        supervisor actually did land in provenance, never in artifacts.
         """
         names = [s.name for s in self.stages]
         ctx = SG.RunContext(cfg=self.cfg, seed=seed, n_iters=n_iters,
                             eval_every=eval_every, data_cfg=self.data_cfg,
                             mask=mask, ckpt_dir=ckpt_dir,
                             ckpt_interval=ckpt_interval, mesh=mesh,
+                            supervised=supervised,
                             defer_final_eval={"backend", "eval"}
                             .issubset(names))
         _feed(ctx, data)
@@ -151,6 +158,7 @@ class IVectorRecipe:
             "stages": [s.name for s in self.stages],
             "mesh": _mesh_provenance(mesh if mesh is not None
                                      else self.cfg.mesh, ctx),
+            "resilience": _resilience_provenance(self.cfg, ctx),
         }
         result = RecipeResult(
             cfg=self.cfg, seed=seed,
@@ -243,6 +251,32 @@ def prepare(cfg: IVectorConfig, data_cfg: SpeechDataConfig, seed: int = 0):
     ctx = SG.STAGE_REGISTRY["features"]().run(ctx)
     ctx = SG.STAGE_REGISTRY["ubm"]().run(ctx)
     return ctx.feats, ctx.labels, ctx.ubm.ubm
+
+
+def _resilience_provenance(cfg: IVectorConfig, ctx) -> Dict:
+    """The run's failure-handling contract (DESIGN.md §13): the policy the
+    config requested plus — for supervised runs — what the supervisor
+    actually did (restarts, rollbacks, ladder escalations, checkpoints it
+    refused as corrupt). Provenance, not artifact: resilience never
+    changes what converged training computes."""
+    from repro.distributed import fault_tolerance as FT
+    out = {
+        "supervised": bool(ctx.supervised),
+        "guardrail": bool(cfg.guardrail),
+        "guardrail_loglik_drop": float(cfg.guardrail_loglik_drop),
+        "policy": FT.RetryPolicy(
+            max_restarts=cfg.max_restarts, backoff=cfg.retry_backoff,
+            step_deadline=cfg.step_deadline,
+            escalate_after=cfg.escalate_after).describe(),
+    }
+    rep = ctx.supervisor_report
+    if rep is not None:
+        out["report"] = {"n_restarts": rep.n_restarts,
+                         "rollbacks": rep.rollbacks,
+                         "escalations": rep.escalations,
+                         "faults": list(rep.faults),
+                         "skipped_corrupt": list(rep.skipped_corrupt)}
+    return out
 
 
 def _mesh_provenance(mesh, ctx) -> Optional[list]:

@@ -63,6 +63,11 @@ class RunContext:
     # checkpointing (threaded into the trainer by the tvm stage)
     ckpt_dir: Optional[str] = None
     ckpt_interval: int = 1
+    # run the tvm stage under the fault-tolerance supervisor
+    # (trainer.train_supervised: retry policy + numerical guardrails +
+    # verified-checkpoint rollback, DESIGN.md §13); requires ckpt_dir
+    supervised: bool = False
+    supervisor_report: Optional[object] = None
     # trainer substrate (DESIGN.md §11): Mesh | (data, model) | None
     # (cfg.mesh, else auto local). A run-time knob, not a stage — it is
     # threaded into every engine entry point but never changes artifacts.
@@ -186,11 +191,24 @@ class TVMStage:
                     e, _ = AR.evaluate_ivectors(cfg, ivecs, ctx.labels,
                                                 ctx.seed)
                     ctx.curve.append((it, e))
-        state = TR.train(cfg, ctx.ubm.ubm, ctx.feats, n_iters=n_iters,
-                         key=jax.random.PRNGKey(ctx.seed + 100),
-                         callback=callback, mask=ctx.mask,
-                         ckpt_dir=ctx.ckpt_dir,
-                         ckpt_interval=ctx.ckpt_interval, mesh=ctx.mesh)
+        if ctx.supervised:
+            # guardrailed, checkpoint-every-step elastic path; the EER
+            # curve is not collected here (the supervisor owns the step
+            # loop), so eval_every applies to the final point only
+            if ctx.ckpt_dir is None:
+                raise ValueError("supervised tvm stage requires ckpt_dir")
+            state, report = TR.train_supervised(
+                cfg, ctx.ubm.ubm, ctx.feats, n_iters=n_iters,
+                key=jax.random.PRNGKey(ctx.seed + 100), mask=ctx.mask,
+                ckpt_dir=ctx.ckpt_dir, mesh=ctx.mesh)
+            ctx.supervisor_report = report
+        else:
+            state = TR.train(cfg, ctx.ubm.ubm, ctx.feats, n_iters=n_iters,
+                             key=jax.random.PRNGKey(ctx.seed + 100),
+                             callback=callback, mask=ctx.mask,
+                             ckpt_dir=ctx.ckpt_dir,
+                             ckpt_interval=ctx.ckpt_interval,
+                             mesh=ctx.mesh)
         ctx.tv = AR.TVArtifact(model=state.model, ubm=state.ubm,
                                iterations=state.iteration,
                                meta={"seed": ctx.seed,

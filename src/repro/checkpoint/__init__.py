@@ -1,8 +1,14 @@
 from repro.checkpoint.manager import (
+    CheckpointCorruption,
     CheckpointManager,
+    all_steps,
     latest_step,
+    latest_verified_step,
     restore,
     save,
+    verify,
 )
 
-__all__ = ["CheckpointManager", "latest_step", "restore", "save"]
+__all__ = ["CheckpointCorruption", "CheckpointManager", "all_steps",
+           "latest_step", "latest_verified_step", "restore", "save",
+           "verify"]

@@ -1,26 +1,44 @@
-"""Mesh-agnostic checkpointing: atomic, versioned, elastic-restorable.
+"""Mesh-agnostic checkpointing: atomic, versioned, elastic-restorable,
+integrity-verified (DESIGN.md §13).
 
 Arrays are written as npz (one file per step) plus a JSON manifest holding
-the pytree structure, shapes, dtypes and the *logical* sharding axes. On
-restore the arrays are placed with NamedShardings built from the logical
-axes against WHATEVER mesh is active — so a checkpoint written on a
-(16, 16) mesh restores onto (8, 8), (2, 16, 16), or a single CPU device
-unchanged (elastic re-mesh). Writes are atomic (tmp dir + rename).
+the pytree structure, shapes, dtypes, a sha256 of the array payload, and
+the *logical* sharding axes. On restore the arrays are placed with
+NamedShardings built from the logical axes against WHATEVER mesh is
+active — so a checkpoint written on a (16, 16) mesh restores onto (8, 8),
+(2, 16, 16), or a single CPU device unchanged (elastic re-mesh). Writes
+are atomic (tmp dir + rename).
+
+Integrity contract: `save` records ``sha256(arrays.npz)`` in the manifest;
+`verify`/`restore` refuse torn or tampered checkpoints (missing manifest,
+missing/unreadable npz, hash mismatch) with `CheckpointCorruption` instead
+of returning garbage arrays — EM corruption is undetectable after the
+fact (DESIGN.md §11), so it must be caught at the restore boundary.
+`CheckpointManager.restore_latest_verified` walks steps newest-first and
+falls back to the newest checkpoint that verifies, recording what it
+skipped. Retention keeps the last ``keep`` steps plus every
+``keep_every``-th step (anchors for the corrupted-latest fallback).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import tempfile
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import ml_dtypes
 import numpy as np
 
 SEP = "|"
+
+
+class CheckpointCorruption(RuntimeError):
+    """A checkpoint failed its integrity check (torn write, bit flip,
+    missing manifest); the restore path must fall back, not load it."""
 
 _NONNATIVE = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
               "float8_e5m2": np.uint8}
@@ -71,6 +89,10 @@ def save(ckpt_dir, step: int, tree, logical_axes=None, extra: Optional[Dict] = N
     try:
         np.savez(tmp / "arrays.npz",
                  **{k: _encode(np.asarray(v))[0] for k, v in flat.items()})
+        manifest["integrity"] = {
+            "algo": "sha256",
+            "arrays.npz": _file_sha256(tmp / "arrays.npz"),
+        }
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         final = ckpt_dir / f"step_{step:08d}"
         if final.exists():
@@ -82,6 +104,14 @@ def save(ckpt_dir, step: int, tree, logical_axes=None, extra: Optional[Dict] = N
     return ckpt_dir / f"step_{step:08d}"
 
 
+def _file_sha256(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
 def latest_step(ckpt_dir) -> Optional[int]:
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
@@ -90,13 +120,75 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir, tree_like, step: Optional[int] = None, rules=None):
+def all_steps(ckpt_dir) -> List[int]:
+    """Every on-disk step, ascending (verified or not)."""
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    return sorted(int(p.name.split("_")[1])
+                  for p in ckpt_dir.glob("step_*"))
+
+
+def verify(ckpt_dir, step: int) -> Dict:
+    """Integrity-check one checkpoint; returns its manifest or raises
+    `CheckpointCorruption`. Checks: manifest present and parseable,
+    arrays.npz present, payload sha256 matches the manifest (legacy
+    manifests without an integrity record skip the hash comparison), and
+    the npz is structurally loadable (torn-write detection)."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    mpath, apath = d / "manifest.json", d / "arrays.npz"
+    if not mpath.exists():
+        raise CheckpointCorruption(f"{d}: manifest.json missing")
+    try:
+        manifest = json.loads(mpath.read_text())
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointCorruption(f"{d}: unreadable manifest: {e}") from e
+    if not apath.exists():
+        raise CheckpointCorruption(f"{d}: arrays.npz missing")
+    integrity = manifest.get("integrity")
+    if integrity is not None:
+        got = _file_sha256(apath)
+        want = integrity.get("arrays.npz")
+        if got != want:
+            raise CheckpointCorruption(
+                f"{d}: arrays.npz sha256 mismatch (stored "
+                f"{str(want)[:12]}.., recomputed {got[:12]}..)")
+    try:
+        with np.load(apath) as data:
+            missing = set(manifest.get("keys", {})) - set(data.files)
+        if missing:
+            raise CheckpointCorruption(
+                f"{d}: arrays.npz missing keys {sorted(missing)[:4]}")
+    except CheckpointCorruption:
+        raise
+    except Exception as e:   # zipfile/ValueError: torn or truncated npz
+        raise CheckpointCorruption(f"{d}: torn arrays.npz: {e}") from e
+    return manifest
+
+
+def latest_verified_step(ckpt_dir) -> Optional[int]:
+    """Newest step that passes `verify` (None if none do)."""
+    for step in reversed(all_steps(ckpt_dir)):
+        try:
+            verify(ckpt_dir, step)
+            return step
+        except CheckpointCorruption:
+            continue
+    return None
+
+
+def restore(ckpt_dir, tree_like, step: Optional[int] = None, rules=None,
+            check: bool = True):
     """Restore into the structure of ``tree_like``. With ``rules`` active,
-    arrays are device_put with shardings rebuilt from stored logical axes."""
+    arrays are device_put with shardings rebuilt from stored logical axes.
+    ``check`` (default) integrity-verifies the checkpoint first and raises
+    `CheckpointCorruption` instead of loading corrupt arrays."""
     ckpt_dir = Path(ckpt_dir)
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    if check:
+        verify(ckpt_dir, step)
     d = ckpt_dir / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
     data = np.load(d / "arrays.npz")
@@ -122,15 +214,25 @@ def restore(ckpt_dir, tree_like, step: Optional[int] = None, rules=None):
 
 
 class CheckpointManager:
-    """Interval-based manager with retention and restart support."""
+    """Interval-based manager with retention, integrity verification, and
+    restart support.
+
+    Retention: the newest ``keep`` checkpoints always survive GC; with
+    ``keep_every`` > 0, steps divisible by it are ALSO retained (long-run
+    anchors — the fall-back targets when the newest checkpoint is found
+    corrupted on restore)."""
 
     def __init__(self, ckpt_dir, save_interval: int = 100, keep: int = 3,
-                 logical_axes=None, rules=None):
+                 logical_axes=None, rules=None, keep_every: int = 0):
         self.dir = Path(ckpt_dir)
         self.save_interval = save_interval
         self.keep = keep
+        self.keep_every = keep_every
         self.logical_axes = logical_axes
         self.rules = rules
+        # steps restore_latest_verified skipped as corrupted, most recent
+        # restore first (supervisor reports surface this)
+        self.skipped_corrupt: List[int] = []
 
     def maybe_save(self, step: int, tree, extra=None, force=False):
         if not force and (step % self.save_interval != 0):
@@ -140,12 +242,46 @@ class CheckpointManager:
         return p
 
     def _gc(self):
-        steps = sorted(p for p in self.dir.glob("step_*"))
-        for p in steps[:-self.keep]:
-            shutil.rmtree(p, ignore_errors=True)
+        steps = all_steps(self.dir)
+        kept = set(steps[-self.keep:] if self.keep > 0 else [])
+        if self.keep_every > 0:
+            kept.update(s for s in steps if s % self.keep_every == 0)
+        for s in steps:
+            if s not in kept:
+                shutil.rmtree(self.dir / f"step_{s:08d}",
+                              ignore_errors=True)
+
+    def steps(self) -> List[int]:
+        return all_steps(self.dir)
+
+    def verify_step(self, step: int) -> Dict:
+        return verify(self.dir, step)
 
     def restore_latest(self, tree_like):
+        """Restore the newest checkpoint; raises `CheckpointCorruption` if
+        it fails integrity (use `restore_latest_verified` to fall back)."""
         return restore(self.dir, tree_like, rules=self.rules)
+
+    def restore_latest_verified(self, tree_like):
+        """Restore the newest checkpoint that VERIFIES, walking past
+        corrupted ones (recorded in ``self.skipped_corrupt``). Raises
+        `FileNotFoundError` when no checkpoint exists at all and
+        `CheckpointCorruption` when every on-disk checkpoint is corrupt."""
+        steps = all_steps(self.dir)
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        self.skipped_corrupt = []
+        for step in reversed(steps):
+            try:
+                verify(self.dir, step)
+            except CheckpointCorruption:
+                self.skipped_corrupt.append(step)
+                continue
+            return restore(self.dir, tree_like, step=step,
+                           rules=self.rules, check=False)
+        raise CheckpointCorruption(
+            f"every checkpoint under {self.dir} is corrupt "
+            f"(steps {self.skipped_corrupt})")
 
     def has_checkpoint(self) -> bool:
         return latest_step(self.dir) is not None

@@ -80,6 +80,26 @@ class IVectorConfig:
     # math runs, never what the pipeline computes, so saved bundles strip
     # it (api/recipe.py) and provenance records it per run.
     mesh: Optional[Tuple[int, int]] = None
+    # --- resilience policy (DESIGN.md §13) ---------------------------------
+    # Knobs of the supervised trainer's failure handling; like ``mesh``
+    # they change how a run survives faults, never what converged training
+    # computes, so bundles strip them and provenance records them per run.
+    guardrail: bool = True       # validate state after every macro-step
+    # relative per-frame avg-loglik drop tolerated between consecutive
+    # macro-steps before the divergence watchdog trips (cliff detector;
+    # realignment legitimately moves the objective)
+    guardrail_loglik_drop: float = 0.5
+    max_restarts: int = 10       # supervisor restart budget per run
+    # base of the exponential retry backoff in seconds (attempt k sleeps
+    # ~backoff * 2^k plus deterministic jitter); 0 = restart immediately
+    retry_backoff: float = 0.0
+    # hard-straggler kill: per-attempt wall-clock budget for one macro-step
+    # in seconds; 0 = no deadline
+    step_deadline: float = 0.0
+    # consecutive guardrail rollbacks at the SAME step before the safety
+    # ladder escalates the config one rung (bf16->f32, fused->sparse->
+    # dense); 0 = roll back and retry unchanged forever
+    escalate_after: int = 2
 
     def __post_init__(self):
         # JSON round-trips (artifact bundles, provenance) turn the tuple
@@ -154,6 +174,22 @@ class IVectorConfig:
                 problems.append(
                     f"mesh model extent {m[1]} does not divide "
                     f"n_components={self.n_components}")
+        if self.max_restarts < 0:
+            problems.append(
+                f"max_restarts={self.max_restarts} must be >= 0")
+        for name in ("retry_backoff", "step_deadline"):
+            if getattr(self, name) < 0:
+                problems.append(f"{name}={getattr(self, name)} must be "
+                                ">= 0 (0 disables it)")
+        if self.guardrail_loglik_drop <= 0:
+            problems.append(
+                f"guardrail_loglik_drop={self.guardrail_loglik_drop} "
+                "must be > 0 (the watchdog is a cliff detector; 'no drop "
+                "allowed' would reject legitimate realignment moves)")
+        if self.escalate_after < 0:
+            problems.append(
+                f"escalate_after={self.escalate_after} must be >= 0 "
+                "(0 disables ladder escalation)")
         if self.estep_dtype == "bfloat16" and self.estep == "dense":
             problems.append(
                 "estep_dtype='bfloat16' with estep='dense': mixed "

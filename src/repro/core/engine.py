@@ -83,6 +83,21 @@ class EngineSpec:
     # (DESIGN.md §8, §12 — 'fused' is the packed-GEMM single-kernel path)
 
 
+# The rescoring fallback ladder (DESIGN.md §12, §13), fastest first: a
+# runtime failure of one mode demotes to the next — every mode feeds the
+# identical downstream math, so demotion is a speed decision, not a
+# semantic one. Serving sessions and the training supervisor's safety
+# ladder both walk this tuple.
+RESCORE_LADDER = ("fused", "sparse", "dense")
+
+
+def degrade_rescore(mode: str) -> Optional[str]:
+    """The next-safer rescore mode, or None when already at 'dense' (the
+    reference path — a failure there is a real bug, not a kernel issue)."""
+    i = RESCORE_LADDER.index(mode)
+    return RESCORE_LADDER[i + 1] if i + 1 < len(RESCORE_LADDER) else None
+
+
 class UBMPack(NamedTuple):
     """The per-model precompute the chunk body scores against (built once
     per pass/session, passed as a jit argument so device buffers are

@@ -1,0 +1,192 @@
+"""Numerical guardrails: validate training state at the failure boundary
+(DESIGN.md §13).
+
+EM here is chaotic — f32 reassociation differences amplify ~1000× per
+iteration through the ill-conditioned M-step solves (DESIGN.md §11) — so
+a NaN batch or a blown-up covariance is *undetectable after the fact*:
+ten iterations later the trajectory is garbage that still looks like a
+model. The only place corruption can be caught is immediately after the
+macro-step that produced it. This module is that check, packaged as the
+supervisor's guardrail hook (`distributed/fault_tolerance.run_supervised`):
+
+  * finiteness of every state leaf (T, Σ, UBM means/covs/weights, the
+    carried sufficient statistics),
+  * the UBM weight simplex (non-negative, summing to 1),
+  * PSD floors: positive Σ/cov diagonals and a finite Cholesky,
+  * a log-likelihood divergence watchdog (the streamed avg loglik must
+    not fall off a cliff between consecutive macro-steps).
+
+On violation the supervisor raises `GuardrailViolation` BEFORE the step's
+checkpoint is written — a bad state never reaches disk — and restarts
+from the last good checkpoint. If the same step keeps violating, the
+safety ladder escalates the config one rung down
+(`escalate_config`: bf16 → f32 contractions, then fused → sparse → dense
+rescoring) and retries: precision/schedule aggressiveness is traded away
+before the run is abandoned.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ivector_tvm import IVectorConfig
+from repro.core.engine import degrade_rescore
+
+
+class GuardrailViolation(RuntimeError):
+    """A post-step state check failed; the step's output must be thrown
+    away and recomputed from the last good checkpoint."""
+
+    def __init__(self, violations: List[str]):
+        super().__init__("; ".join(violations))
+        self.violations = list(violations)
+
+
+@dataclass(frozen=True)
+class GuardrailConfig:
+    """Thresholds of one guardrail instance (all checks are read-only)."""
+    weight_tol: float = 1e-3        # |Σ_c w_c - 1| tolerance
+    cov_floor: float = 0.0          # min allowed Σ/cov diagonal (0 = >0)
+    # relative drop of the per-frame avg loglik tolerated between
+    # consecutive macro-steps; realignment legitimately moves the
+    # objective, so this is a cliff detector, not a monotonicity check
+    loglik_drop_tol: float = 0.5
+    check_psd: bool = True          # Cholesky-based PSD validation
+
+
+def _finite(name: str, arr, out: List[str]) -> None:
+    a = np.asarray(arr)
+    if a.dtype.kind == "f" and not np.isfinite(a).all():
+        bad = int(a.size - np.isfinite(a).sum())
+        out.append(f"{name}: {bad}/{a.size} non-finite entries")
+
+
+def check_state(tree: Dict, metrics: Optional[Dict] = None,
+                prev_metrics: Optional[Dict] = None,
+                gcfg: GuardrailConfig = GuardrailConfig()) -> List[str]:
+    """Validate one supervised-trainer checkpoint tree (`_ckpt_tree`
+    layout: model, ubm, carried n/f/ss). Returns a list of human-readable
+    violations — empty means the state is good. Pure read-only numpy; no
+    state is modified and nothing is traced."""
+    out: List[str] = []
+    model, ubm = tree.get("model"), tree.get("ubm")
+    if model is not None:
+        _finite("model.T", model.T, out)
+        _finite("model.Sigma", model.Sigma, out)
+        sig = np.asarray(model.Sigma)
+        if np.isfinite(sig).all():
+            diag = np.diagonal(sig, axis1=-2, axis2=-1)
+            if (diag <= gcfg.cov_floor).any():
+                out.append(
+                    f"model.Sigma: {int((diag <= gcfg.cov_floor).sum())} "
+                    f"diagonal entries <= floor {gcfg.cov_floor}")
+            elif gcfg.check_psd and not np.isfinite(
+                    np.asarray(jnp.linalg.cholesky(jnp.asarray(sig)))).all():
+                out.append("model.Sigma: not positive definite "
+                           "(Cholesky failed)")
+    if ubm is not None:
+        _finite("ubm.means", ubm.means, out)
+        _finite("ubm.covs", ubm.covs, out)
+        _finite("ubm.weights", ubm.weights, out)
+        w = np.asarray(ubm.weights)
+        if np.isfinite(w).all():
+            if (w < 0).any():
+                out.append(f"ubm.weights: {int((w < 0).sum())} negative")
+            if abs(float(w.sum()) - 1.0) > gcfg.weight_tol:
+                out.append(f"ubm.weights: sum {float(w.sum()):.6f} off "
+                           f"the simplex (tol {gcfg.weight_tol})")
+        covs = np.asarray(ubm.covs)
+        if np.isfinite(covs).all() and covs.ndim == 3:
+            diag = np.diagonal(covs, axis1=-2, axis2=-1)
+            if (diag <= gcfg.cov_floor).any():
+                out.append(
+                    f"ubm.covs: {int((diag <= gcfg.cov_floor).sum())} "
+                    f"diagonal entries <= floor {gcfg.cov_floor}")
+            elif gcfg.check_psd and not np.isfinite(np.asarray(
+                    jnp.linalg.cholesky(jnp.asarray(covs)))).all():
+                out.append("ubm.covs: not positive definite "
+                           "(Cholesky failed)")
+    for k in ("n", "f", "ss"):
+        if k in tree:
+            _finite(f"stats.{k}", tree[k], out)
+    if "n" in tree:
+        n = np.asarray(tree["n"])
+        if np.isfinite(n).all() and (n < 0).any():
+            out.append(f"stats.n: {int((n < 0).sum())} negative "
+                       "occupancies")
+    # loglik divergence watchdog: per-frame avg loglik must not cliff
+    if metrics is not None:
+        ll = metrics.get("avg_loglik")
+        if ll is not None:
+            ll = float(ll)
+            if not np.isfinite(ll):
+                out.append(f"avg_loglik non-finite: {ll}")
+            elif prev_metrics is not None:
+                prev = prev_metrics.get("avg_loglik")
+                if prev is not None and np.isfinite(float(prev)):
+                    prev = float(prev)
+                    drop = prev - ll
+                    allowed = gcfg.loglik_drop_tol * max(abs(prev), 1.0)
+                    if drop > allowed:
+                        out.append(
+                            f"avg_loglik diverged: {prev:.4f} -> {ll:.4f} "
+                            f"(drop {drop:.4f} > allowed {allowed:.4f})")
+    return out
+
+
+def make_guardrail(gcfg: GuardrailConfig = GuardrailConfig()):
+    """The supervisor-shaped hook: ``guardrail(state_tree, metrics) ->
+    violations``. Carries the previous step's metrics internally for the
+    loglik watchdog; a restart (rollback) resets the watchdog so the
+    recomputed step is compared against its true predecessor."""
+    prev: Dict = {}
+
+    def guardrail(tree, metrics) -> List[str]:
+        v = check_state(tree, metrics, prev.get("m"), gcfg)
+        if not v:
+            prev["m"] = (None if metrics is None
+                         else {k: float(val) for k, val in metrics.items()
+                               if np.ndim(val) == 0})
+        return v
+
+    def reset():
+        prev.pop("m", None)
+
+    guardrail.reset = reset
+    return guardrail
+
+
+# ---------------------------------------------------------------------------
+# The safety ladder (DESIGN.md §13): trade speed for safety, one rung at
+# a time, before giving up on a run
+# ---------------------------------------------------------------------------
+
+
+def escalate_config(cfg: IVectorConfig) -> Optional[IVectorConfig]:
+    """One rung down the safety ladder, or None when fully conservative:
+
+        estep_dtype bf16 -> f32        (mixed precision off first)
+        rescore fused -> sparse -> dense (kernel aggressiveness second)
+
+    Each rung changes WHERE the math runs, never what converged training
+    would compute (the modes agree to fp tolerance — DESIGN.md §8/§9/§12),
+    so escalating mid-run keeps the trajectory valid."""
+    if cfg.estep_dtype == "bfloat16":
+        return cfg.with_overrides(estep_dtype="float32")
+    nxt = degrade_rescore(cfg.rescore)
+    if nxt is not None:
+        return cfg.with_overrides(rescore=nxt)
+    return None
+
+
+def escalation_ladder(cfg: IVectorConfig) -> List[IVectorConfig]:
+    """Every config the ladder can reach from ``cfg``, safest last."""
+    out = []
+    cur = escalate_config(cfg)
+    while cur is not None:
+        out.append(cur)
+        cur = escalate_config(cur)
+    return out

@@ -44,6 +44,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import manager as CM
 from repro.configs.ivector_tvm import IVectorConfig
 from repro.core import engine as EN
+from repro.core import guardrails as GR
 from repro.core import stats as ST
 from repro.core import tvm as TV
 from repro.core import ubm as U
@@ -322,7 +323,10 @@ def train(cfg: IVectorConfig, ubm: U.FullGMM, feats,
         mgr = CM.CheckpointManager(ckpt_dir, save_interval=ckpt_interval,
                                    keep=ckpt_keep)
         if mgr.has_checkpoint():
-            tree, step, _ = mgr.restore_latest(_ckpt_tree(state, None))
+            # newest VERIFIED checkpoint: a torn/tampered latest write
+            # falls back instead of resuming from garbage (DESIGN.md §13)
+            tree, step, _ = mgr.restore_latest_verified(
+                _ckpt_tree(state, None))
             state.model = tree["model"]
             state.ubm = tree["ubm"]
             prev = EN.UBMStats(tree["n"], tree["f"], tree["ss"],
@@ -407,13 +411,16 @@ def _train_batched(cfg, state, feats, mask, n_iters, start, prev, mgr,
 class _StepFeed:
     """Step-indexed feed for `fault_tolerance.run_supervised`: the batch
     is the (already device-resident) full macro-batch every step, so the
-    data cursor is just the step counter — deterministic, resumable."""
+    data cursor is just the step counter — deterministic, resumable.
+    ``gain`` is a float leaf the chaos NaN-batch injector can poison; the
+    step multiplies features by it (exactly 1.0 normally — bit-inert)."""
 
     def __init__(self):
         self.step = 0
 
     def next(self):
-        b = {"it": np.asarray(self.step, np.int64)}
+        b = {"it": np.asarray(self.step, np.int64),
+             "gain": np.asarray(1.0, np.float32)}
         self.step += 1
         return b
 
@@ -426,8 +433,11 @@ class _StepFeed:
 
 def train_supervised(cfg: IVectorConfig, ubm: U.FullGMM, feats,
                      n_iters: Optional[int] = None, key=None, mask=None,
-                     ckpt_dir=None, ckpt_keep: int = 3, mesh=None,
-                     fail_at=None, max_restarts: int = 10):
+                     ckpt_dir=None, ckpt_keep: int = 3,
+                     ckpt_keep_every: int = 0, mesh=None,
+                     fail_at=None, max_restarts: Optional[int] = None,
+                     policy: Optional[FT.RetryPolicy] = None,
+                     guardrail=None, chaos: Optional[FT.Chaos] = None):
     """Elastic training: the SAME macro-step as `train` (fused streamed
     EM pass + realignment write-back), driven by
     `distributed/fault_tolerance.run_supervised` with a checkpoint every
@@ -437,6 +447,14 @@ def train_supervised(cfg: IVectorConfig, ubm: U.FullGMM, feats,
     bit-exactly from the previous one (f32 npz round-trips exactly;
     alignment is a pure function of the restored model/UBM).
 
+    Resilience policy (DESIGN.md §13) comes from ``cfg`` unless
+    overridden: ``policy`` defaults to the config's restart/backoff/
+    deadline knobs, ``guardrail`` to `core.guardrails.make_guardrail`
+    when ``cfg.guardrail`` is set, and the safety-ladder escalation
+    (``cfg.escalate_after`` consecutive rollbacks at one step → next
+    `guardrails.escalation_ladder` config) rebuilds the jitted step
+    in-place. ``chaos`` injects drill faults.
+
     Returns (TrainState, SupervisorReport).
     """
     if ckpt_dir is None:
@@ -445,29 +463,59 @@ def train_supervised(cfg: IVectorConfig, ubm: U.FullGMM, feats,
     n_steps = n_iters or cfg.n_iters
     mesh = _resolve_mesh(cfg, mesh, feats.shape[0])
     feats, mask = _place(mesh, feats, mask)
-    iter_fn = make_iter_fn(cfg, mesh)
 
     def init_state_fn():
         model = TV.init_model(key, ubm.means, ubm.covs, cfg.ivector_dim,
                               cfg.formulation, cfg.prior_offset)
         return _ckpt_tree(TrainState(model=model, ubm=ubm), None)
 
-    def step_fn(tree, batch):
-        it = int(batch["it"])
-        model, gmm = tree["model"], tree["ubm"]
-        prev = EN.UBMStats(tree["n"], tree["f"], tree["ss"],
-                           jnp.zeros((), f32), jnp.zeros((), f32))
-        if _realign_due(cfg, it, model):
-            gmm = refresh_ubm(cfg, model, gmm, prev)
-        model, tot, diag = iter_fn(model, gmm, feats, mask)
-        return _ckpt_tree(TrainState(model=model, ubm=gmm), tot), diag
+    def make_step_fn(c: IVectorConfig):
+        iter_fn = make_iter_fn(c, mesh)
 
-    ckpt = CM.CheckpointManager(ckpt_dir, save_interval=1, keep=ckpt_keep)
+        def step_fn(tree, batch):
+            it = int(batch["it"])
+            model, gmm = tree["model"], tree["ubm"]
+            prev = EN.UBMStats(tree["n"], tree["f"], tree["ss"],
+                               jnp.zeros((), f32), jnp.zeros((), f32))
+            if _realign_due(c, it, model):
+                gmm = refresh_ubm(c, model, gmm, prev)
+            # gain is exactly 1.0 outside chaos drills: x * 1.0 is
+            # bit-exact, and a poisoned (NaN) gain floods the features so
+            # the guardrail trips on the resulting state
+            model, tot, diag = iter_fn(model, gmm,
+                                       feats * batch["gain"], mask)
+            return _ckpt_tree(TrainState(model=model, ubm=gmm), tot), diag
+
+        return step_fn
+
+    if policy is None:
+        policy = FT.RetryPolicy(
+            max_restarts=(cfg.max_restarts if max_restarts is None
+                          else max_restarts),
+            backoff=cfg.retry_backoff, step_deadline=cfg.step_deadline,
+            escalate_after=cfg.escalate_after)
+    if guardrail is None and cfg.guardrail:
+        guardrail = GR.make_guardrail(GR.GuardrailConfig(
+            loglik_drop_tol=cfg.guardrail_loglik_drop))
+
+    ladder = iter(GR.escalation_ladder(cfg))
+    escalated: list = []
+
+    def on_escalate():
+        c2 = next(ladder, None)
+        if c2 is None:
+            return None
+        escalated.append(c2)
+        return make_step_fn(c2)
+
+    ckpt = CM.CheckpointManager(ckpt_dir, save_interval=1, keep=ckpt_keep,
+                                keep_every=ckpt_keep_every)
     report = FT.run_supervised(
-        init_state_fn=init_state_fn, train_step_fn=step_fn,
+        init_state_fn=init_state_fn, train_step_fn=make_step_fn(cfg),
         data_factory=_StepFeed, n_steps=n_steps, ckpt=ckpt,
-        fail_at=fail_at, max_restarts=max_restarts)
-    tree, _, _ = ckpt.restore_latest(init_state_fn())
+        fail_at=fail_at, policy=policy, guardrail=guardrail,
+        on_escalate=on_escalate, chaos=chaos)
+    tree, _, _ = ckpt.restore_latest_verified(init_state_fn())
     state = TrainState(model=tree["model"], ubm=tree["ubm"],
                        iteration=report.final_step)
     return state, report

@@ -31,7 +31,8 @@ from repro.core import trainer as TR
 from repro.core import ubm as U
 from repro.data.speech import (FRAME_RATE, SpeechDataConfig,
                                build_ragged_dataset)
-from repro.serving import IVectorExtractor, ServingConfig
+from repro.serving import AdmissionQueue, IVectorExtractor, QueueFull, \
+    ServingConfig
 
 
 def build_state(cfg, data_cfg, train_iters: int):
@@ -59,6 +60,11 @@ def main():
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--min-bucket", type=int, default=32)
     ap.add_argument("--train-iters", type=int, default=1)
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="admission-queue capacity (0 = direct extract, "
+                         "no queue)")
+    ap.add_argument("--deadline", type=float, default=30.0,
+                    help="per-request deadline in seconds (queue mode)")
     args = ap.parse_args()
 
     if args.bundle is not None:
@@ -96,12 +102,40 @@ def main():
     ex = IVectorExtractor.from_bundle(
         bundle_path, ServingConfig(max_batch=args.batch,
                                    min_bucket=args.min_bucket))
+    # readiness probe BEFORE traffic: the canary runs the same path as
+    # real requests, so a broken fused kernel demotes here, not mid-load
+    health = ex.health_check()
+    print(f"  readiness: ok={health['ok']} mode={health['mode']} "
+          f"canary latency {health['latency_s']:.3f}s")
+    if not health["ok"]:
+        raise SystemExit(f"serving session unhealthy: {health}")
     t0 = time.time()
     ex.extract(utts)                    # cold pass: compiles every bucket
     cold = time.time() - t0
-    t0 = time.time()
-    ivecs = ex.extract(utts)            # steady state
-    wall = time.time() - t0
+    if args.max_pending > 0:
+        # admission-controlled serving: bounded queue + deadlines; shed
+        # requests are reported, never silently dropped
+        q = AdmissionQueue(ex, max_pending=args.max_pending,
+                           default_timeout=args.deadline)
+        ids, shed = [], 0
+        t0 = time.time()
+        results = {}
+        for u in utts:
+            try:
+                ids.append(q.submit(u))
+            except QueueFull:
+                shed += 1
+                results.update(q.drain())   # one batching tick, then retry
+                ids.append(q.submit(u))
+        results.update(q.drain())
+        wall = time.time() - t0
+        served = [results[i] for i in ids if not results[i].expired]
+        ivecs = np.stack([r.ivector for r in served])
+        print(f"  admission: {q.stats} (hit capacity {shed}x)")
+    else:
+        t0 = time.time()
+        ivecs = ex.extract(utts)        # steady state
+        wall = time.time() - t0
     frames = sum(u.shape[0] for u in (np.asarray(u) for u in utts))
     audio_s = frames / FRAME_RATE
     print(f"served {len(utts)} utterances ({frames} frames, "
@@ -110,6 +144,10 @@ def main():
     print(f"  throughput: {len(utts) / wall:.1f} utts/s, "
           f"real-time factor {audio_s / wall:.1f}x")
     print(f"  buckets: {ex.buckets()}  stats: {ex.stats}")
+    print(f"  guardrails: mode={ex.mode} "
+          f"degradations={ex.stats['degradations']} "
+          f"truncated={ex.stats['truncated']} "
+          f"nonfinite_frames={ex.stats['nonfinite_frames']}")
     print(f"  ivector shape: {ivecs.shape}, "
           f"norms ~ {np.linalg.norm(ivecs, axis=1).mean():.3f}")
 

@@ -1,4 +1,8 @@
-"""Production-facing serving layer: batched variable-length extraction."""
-from repro.serving.extractor import IVectorExtractor, ServingConfig
+"""Production-facing serving layer: batched variable-length extraction
+with input validation, admission control, and runtime degradation."""
+from repro.serving.extractor import (IVectorExtractor, RequestInfo,
+                                     ServingConfig)
+from repro.serving.guard import AdmissionQueue, QueueFull, RequestResult
 
-__all__ = ["IVectorExtractor", "ServingConfig"]
+__all__ = ["AdmissionQueue", "IVectorExtractor", "QueueFull",
+           "RequestInfo", "RequestResult", "ServingConfig"]

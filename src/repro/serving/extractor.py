@@ -1,4 +1,4 @@
-"""Batched variable-length i-vector extraction service (DESIGN.md §5).
+"""Batched variable-length i-vector extraction service (DESIGN.md §5, §13).
 
 The training stack works on fixed [U, F, D] blocks; production traffic is
 ragged — one utterance per request, each a different number of frames. This
@@ -22,11 +22,24 @@ module turns the trained (UBM, TVM) pair into a serving session:
 Masking (core/alignment.py, core/stats.py) makes the padding exact: a
 padded-and-masked utterance produces bit-identical Baum-Welch statistics
 to the unpadded one, so bucketing is a pure performance decision.
+
+Serving guardrails (DESIGN.md §13): inputs are validated instead of
+trusted — non-finite (NaN/Inf) frames are masked out and counted,
+over-long utterances are truncated with an explicit per-request
+``truncated`` flag (never silently), and empty/all-invalid utterances
+come back as flagged zero vectors. A runtime failure of the alignment
+kernel demotes the session down the rescore ladder fused → sparse →
+dense (`engine.degrade_rescore`) and keeps serving — a kernel bug
+degrades throughput, it does not kill the server. `health_check` runs a
+canary extraction through the same path as real traffic, so a readiness
+probe exercises (and, if needed, pre-demotes) the session before traffic
+arrives. Admission control lives in `serving/guard.py`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Sequence
+import time
+from dataclasses import dataclass, replace
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +61,18 @@ class ServingConfig:
     min_bucket: int = 64     # smallest frame bucket
     max_bucket: int = 8192   # hard cap; longer utterances are truncated
     length_norm: bool = True
+
+
+@dataclass
+class RequestInfo:
+    """Per-request validation outcome, returned alongside the i-vector
+    (``extract(..., return_info=True)``). Nothing here is silent: the
+    counters in ``IVectorExtractor.stats`` aggregate the same events."""
+    n_frames: int = 0          # frames that actually entered extraction
+    bucket: int = 0
+    truncated: bool = False    # clipped at ServingConfig.max_bucket
+    empty: bool = False        # zero valid frames -> zero i-vector
+    nonfinite_frames: int = 0  # NaN/Inf frames masked out of the input
 
 
 class IVectorExtractor:
@@ -75,12 +100,19 @@ class IVectorExtractor:
         # cached precompute's bytes; extraction itself runs the mean-only
         # posterior (no [B, R, R] covariance solve) via extract_ivectors
         self._tv_pre = TV.precompute(model, estep=cfg.estep)
-        # jit specializes per input shape, so one jitted fn covers every
-        # bucket; _seen_buckets tracks which shapes have been compiled
-        self._fn = jax.jit(self._extract_batch)
+        # one jitted fn PER rescore mode (jit specializes per input shape,
+        # so each covers every bucket); the session starts at the config's
+        # mode and demotes down engine.RESCORE_LADDER on kernel failure
+        self.mode: str = cfg.rescore
+        self._fns: Dict[str, object] = {}
+        # chaos hook (tests): modes whose device call raises, simulating
+        # a kernel failure
+        self._chaos_fail_modes: set = set()
         self._seen_buckets: set = set()
         self.stats = {"requests": 0, "batches": 0, "compiles": 0,
-                      "real_frames": 0, "padded_frames": 0, "truncated": 0}
+                      "real_frames": 0, "padded_frames": 0, "truncated": 0,
+                      "empty": 0, "nonfinite_frames": 0,
+                      "degradations": 0, "mode": self.mode}
 
     @classmethod
     def from_state(cls, cfg: IVectorConfig, state,
@@ -114,48 +146,106 @@ class IVectorExtractor:
 
     # -- the jitted per-bucket extraction -----------------------------------
 
-    def _extract_batch(self, pack, model, tv_pre, feats, mask):
-        """[B, bucket, D], [B, bucket] -> [B, R] (zero rows where mask=0).
+    def _make_fn(self, mode: str):
+        """Jitted [B, bucket, D], [B, bucket] -> [B, R] for one rescore
+        mode (zero rows where mask=0).
 
         The cached model/precompute pytrees come in as jit ARGUMENTS, not
         closure constants: constants would be re-embedded into every
         bucket-shape executable (hundreds of MB each at production scale),
         arguments share one device buffer across all buckets. The
         align->stats math is the engine's canonical chunk body — the same
-        implementation the training stack streams through.
+        implementation the training stack streams through — and every
+        mode computes the same statistics (fp-tolerance equal), so a
+        mid-session demotion changes speed, not answers.
         """
-        cs = EN.chunk_body(self._spec, pack, feats, mask)
-        st = ST.BWStats(cs.n, cs.f, None)
-        if model.formulation == "standard":
-            stc = ST.center(ST.BWStats(st.n, st.f, None), model.means)
-            n_, f_ = stc.n, stc.f
-        else:
-            n_, f_ = st.n, st.f
-        iv = TV.extract_ivectors(model, tv_pre, n_, f_,
-                                 estep_dtype=self.cfg.estep_dtype)
-        if self.serving.length_norm:
-            iv = BK.length_norm(iv)
-        # zero-occupancy padding rows extract the prior mean; blank them
-        return iv * jnp.any(mask > 0, axis=1)[:, None]
+        spec = replace(self._spec, rescore=mode)
+
+        def fn(pack, model, tv_pre, feats, mask):
+            cs = EN.chunk_body(spec, pack, feats, mask)
+            st = ST.BWStats(cs.n, cs.f, None)
+            if model.formulation == "standard":
+                stc = ST.center(ST.BWStats(st.n, st.f, None), model.means)
+                n_, f_ = stc.n, stc.f
+            else:
+                n_, f_ = st.n, st.f
+            iv = TV.extract_ivectors(model, tv_pre, n_, f_,
+                                     estep_dtype=self.cfg.estep_dtype)
+            if self.serving.length_norm:
+                iv = BK.length_norm(iv)
+            # zero-occupancy padding rows extract the prior mean; blank
+            return iv * jnp.any(mask > 0, axis=1)[:, None]
+
+        return jax.jit(fn)
+
+    def _run_batch(self, feats, mask) -> np.ndarray:
+        """One device call at the session's current mode, demoting down
+        the rescore ladder on failure instead of raising (DESIGN.md §13).
+        Only a failure of the reference 'dense' path propagates."""
+        while True:
+            mode = self.mode
+            try:
+                if mode in self._chaos_fail_modes:
+                    raise RuntimeError(
+                        f"injected {mode}-kernel failure (chaos)")
+                if mode not in self._fns:
+                    self._fns[mode] = self._make_fn(mode)
+                return np.asarray(self._fns[mode](
+                    self._pack, self.model, self._tv_pre, feats, mask))
+            except Exception:
+                nxt = EN.degrade_rescore(mode)
+                if nxt is None:
+                    raise
+                self.mode = nxt
+                self.stats["mode"] = nxt
+                self.stats["degradations"] += 1
+
+    # -- input validation ---------------------------------------------------
+
+    def _validate(self, u: np.ndarray, D: int
+                  ) -> Tuple[np.ndarray, np.ndarray, RequestInfo]:
+        """One raw utterance -> (clean feats, valid-frame flags, info).
+        Non-finite frames are zeroed AND masked out — masking is exactly
+        inert (bit-identical stats; DESIGN.md §5) so a poisoned frame
+        contributes nothing instead of flooding the batch with NaNs."""
+        if u.ndim != 2 or u.shape[1] != D:
+            raise ValueError(f"utterance must be [F, {D}], got {u.shape}")
+        info = RequestInfo(n_frames=int(u.shape[0]))
+        if u.shape[0] > self.serving.max_bucket:
+            u = u[:self.serving.max_bucket]
+            info.truncated = True
+            info.n_frames = int(u.shape[0])
+            self.stats["truncated"] += 1
+        valid = np.isfinite(u).all(axis=1)
+        bad = int(u.shape[0] - valid.sum())
+        if bad:
+            info.nonfinite_frames = bad
+            self.stats["nonfinite_frames"] += bad
+            u = np.where(valid[:, None], u, 0.0).astype(np.float32)
+        if valid.sum() == 0:
+            info.empty = True
+            self.stats["empty"] += 1
+        info.bucket = self.bucket_for(max(int(u.shape[0]), 1))
+        return u, valid, info
 
     # -- public API ---------------------------------------------------------
 
-    def extract(self, utterances: Sequence) -> np.ndarray:
-        """Ragged [F_i, D] utterances -> [N, R] i-vectors (input order)."""
+    def extract(self, utterances: Sequence, return_info: bool = False):
+        """Ragged [F_i, D] utterances -> [N, R] i-vectors (input order).
+        With ``return_info`` also returns the per-request `RequestInfo`
+        list (truncation/empty/non-finite flags)."""
         D = self.ubm.means.shape[1]
         R = self.model.rank
         B = self.serving.max_batch
-        utts = [np.asarray(u, np.float32) for u in utterances]
-        for u in utts:
-            if u.ndim != 2 or u.shape[1] != D:
-                raise ValueError(f"utterance must be [F, {D}], got {u.shape}")
+        utts, valids, infos = [], [], []
+        for raw in utterances:
+            u, valid, info = self._validate(np.asarray(raw, np.float32), D)
+            utts.append(u)
+            valids.append(valid)
+            infos.append(info)
         groups: Dict[int, List[int]] = {}
-        for i, u in enumerate(utts):
-            n = u.shape[0]
-            if n > self.serving.max_bucket:
-                self.stats["truncated"] += 1
-                n = self.serving.max_bucket
-            groups.setdefault(self.bucket_for(n), []).append(i)
+        for i, info in enumerate(infos):
+            groups.setdefault(info.bucket, []).append(i)
         out = np.zeros((len(utts), R), np.float32)
         for bucket in sorted(groups):
             if bucket not in self._seen_buckets:
@@ -169,14 +259,49 @@ class IVectorExtractor:
                 for j, i in enumerate(chunk):
                     n = min(utts[i].shape[0], bucket)
                     feats[j, :n] = utts[i][:n]
-                    mask[j, :n] = 1.0
+                    mask[j, :n] = valids[i][:n].astype(np.float32)
                     self.stats["real_frames"] += n
                     self.stats["padded_frames"] += bucket - n
-                out[chunk] = np.asarray(self._fn(
-                    self._pack, self.model, self._tv_pre,
-                    jnp.asarray(feats), jnp.asarray(mask)))[:len(chunk)]
+                out[chunk] = self._run_batch(
+                    jnp.asarray(feats), jnp.asarray(mask))[:len(chunk)]
                 self.stats["batches"] += 1
         self.stats["requests"] += len(utts)
+        if return_info:
+            return out, infos
         return out
 
     __call__ = extract
+
+    # -- health / readiness -------------------------------------------------
+
+    def health_check(self) -> Dict:
+        """Readiness probe: extract a deterministic canary utterance
+        through the SAME path as real traffic (validation, bucketing,
+        degradation wrapper) and verify the result is finite and
+        non-trivial. A broken fused kernel therefore demotes during the
+        probe, before traffic arrives. Does not touch request stats."""
+        D = self.ubm.means.shape[1]
+        F = self.serving.min_bucket
+        canary = np.asarray(
+            np.sin(np.arange(F)[:, None] * 0.37
+                   + np.arange(D)[None, :] * 1.13), np.float32)
+        before = dict(self.stats)
+        t0 = time.perf_counter()
+        try:
+            iv = self.extract([canary])
+            latency = time.perf_counter() - t0
+            norm = float(np.linalg.norm(iv[0]))
+            ok = bool(np.isfinite(iv).all()) and norm > 0.0
+            err = None
+        except Exception as e:   # dense path failed too: not servable
+            latency = time.perf_counter() - t0
+            ok, norm, err = False, float("nan"), repr(e)
+        # the canary is a probe, not traffic: restore request counters
+        # (mode/degradations reflect what the probe learned and stay)
+        for k in ("requests", "batches", "real_frames", "padded_frames"):
+            self.stats[k] = before[k]
+        return {"ok": ok, "mode": self.mode,
+                "degradations": self.stats["degradations"],
+                "latency_s": latency, "canary_norm": norm,
+                "buckets_compiled": len(self._seen_buckets),
+                "error": err}

@@ -1,0 +1,117 @@
+"""Admission control for the serving session (DESIGN.md §13): a bounded
+queue with per-request deadlines and explicit load-shedding.
+
+The extractor itself is a pure batch function; what makes a service
+survivable under overload is the layer in front of it deciding which
+requests to run AT ALL:
+
+  * **bounded queue** — ``submit`` on a full queue raises `QueueFull`
+    immediately (the caller's 503/retry-after), instead of buffering
+    unbounded work the session can never catch up on;
+  * **per-request deadlines** — every admitted request carries an
+    absolute deadline; ``drain`` discards requests that expired while
+    queued (their caller has already timed out — extracting them would
+    spend device time producing an answer nobody reads) and batches the
+    live ones through `IVectorExtractor.extract`;
+  * **observability** — every shed request is counted by cause
+    (``shed_full`` / ``shed_deadline``), mirroring the extractor's own
+    validation counters.
+
+The queue is synchronous and single-threaded by design: it is the
+admission policy a real server loop pumps (one ``drain`` per batching
+tick), packaged so the chaos drills can exercise overload and deadline
+behaviour deterministically via an injectable clock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.extractor import IVectorExtractor, RequestInfo
+
+
+class QueueFull(RuntimeError):
+    """The admission queue is at capacity; the request was load-shed
+    before any work happened (the caller should back off and retry)."""
+
+
+@dataclass
+class _Pending:
+    id: int
+    utterance: np.ndarray
+    deadline: float          # absolute, in the queue's clock
+    submitted: float
+
+
+@dataclass
+class RequestResult:
+    """Outcome of one admitted request after a ``drain``."""
+    id: int
+    ivector: Optional[np.ndarray]   # None when expired
+    expired: bool
+    wait_s: float                   # time spent queued
+    info: Optional[RequestInfo] = None
+
+
+@dataclass
+class AdmissionQueue:
+    """Bounded deadline-aware work queue in front of one extractor."""
+    extractor: IVectorExtractor
+    max_pending: int = 64
+    default_timeout: float = 30.0
+    clock: Callable[[], float] = time.monotonic
+    _pending: List[_Pending] = field(default_factory=list)
+    _next_id: int = 0
+    stats: Dict[str, int] = field(default_factory=lambda: {
+        "submitted": 0, "shed_full": 0, "shed_deadline": 0, "served": 0})
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, utterance, timeout: Optional[float] = None) -> int:
+        """Admit one utterance; returns its request id or raises
+        `QueueFull` (load-shedding — nothing was enqueued)."""
+        if len(self._pending) >= self.max_pending:
+            self.stats["shed_full"] += 1
+            raise QueueFull(
+                f"admission queue at capacity ({self.max_pending})")
+        now = self.clock()
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append(_Pending(
+            id=rid, utterance=np.asarray(utterance, np.float32),
+            deadline=now + (self.default_timeout if timeout is None
+                            else timeout),
+            submitted=now))
+        self.stats["submitted"] += 1
+        return rid
+
+    def drain(self) -> Dict[int, RequestResult]:
+        """Serve everything admissible NOW: requests whose deadline
+        already passed are shed (their result is an expired marker, no
+        device work), the rest run as one `extract` call. Returns
+        results keyed by request id; the queue is left empty."""
+        now = self.clock()
+        batch, results = [], {}
+        for p in self._pending:
+            if now > p.deadline:
+                self.stats["shed_deadline"] += 1
+                results[p.id] = RequestResult(
+                    id=p.id, ivector=None, expired=True,
+                    wait_s=now - p.submitted)
+            else:
+                batch.append(p)
+        self._pending = []
+        if batch:
+            ivecs, infos = self.extractor.extract(
+                [p.utterance for p in batch], return_info=True)
+            done = self.clock()
+            for p, iv, info in zip(batch, ivecs, infos):
+                results[p.id] = RequestResult(
+                    id=p.id, ivector=iv, expired=False,
+                    wait_s=done - p.submitted, info=info)
+            self.stats["served"] += len(batch)
+        return results
