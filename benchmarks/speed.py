@@ -10,6 +10,8 @@ terms of the ivector-tvm cell (197 TFLOP/s target vs measured CPU rate).
 from __future__ import annotations
 
 import json
+import os
+import signal
 import sys
 import time
 from pathlib import Path
@@ -724,6 +726,351 @@ def run_resilience(smoke: bool = False, out_path=None):
     return r
 
 
+# -- streaming sessions: load, chaos, and rollout (DESIGN.md §14) ----------
+
+_STREAM_WORKER = r"""
+import json, os, signal, sys
+import numpy as np
+spec = json.loads(sys.argv[1])
+import jax, jax.numpy as jnp
+from repro.configs.ivector_tvm import SMOKE
+from repro.core import tvm as TV
+from repro.core import ubm as U
+from repro.serving import (IVectorExtractor, ServingConfig, SessionConfig,
+                           SessionStore)
+
+cfg = SMOKE.with_overrides(**spec["overrides"])
+C, D, R = cfg.n_components, cfg.feat_dim, cfg.ivector_dim
+key = jax.random.PRNGKey(0)
+means = jax.random.normal(key, (C, D)) * 2.0
+A = jax.random.normal(jax.random.fold_in(key, 1), (C, D, D)) * 0.2
+covs = jnp.einsum('cij,ckj->cik', A, A) + jnp.eye(D)
+ubm = U.FullGMM(jnp.ones((C,)) / C, means, covs)
+model = TV.init_model(jax.random.fold_in(key, 3), ubm.means, ubm.covs,
+                      R, cfg.formulation, cfg.prior_offset)
+F = spec["chunk_frames"]
+ex = IVectorExtractor(cfg, model, ubm,
+                      ServingConfig(min_bucket=F, max_bucket=4 * F))
+store = SessionStore(ex, SessionConfig(
+    chunk_min_bucket=F, chunk_max_bucket=4 * F,
+    journal_dir=spec["journal_dir"]))
+mode, S, ROUNDS = spec["mode"], spec["n_sessions"], spec["n_rounds"]
+if mode == "resume":
+    print("RESTORED %d TORN %d" % (store.stats["restored"],
+                                   store.stats["journal_torn"]), flush=True)
+
+def chunk(i, r):
+    rng = np.random.RandomState(spec["seed"] * 100003 + i * 1009 + r)
+    return rng.randn(F, D).astype(np.float32)
+
+emitted = 0
+for r in range(ROUNDS):
+    for i in range(S):
+        sid = "s%d" % i
+        s = store.session(sid)
+        if s is not None and s.chunks >= r + 1:
+            continue          # resume: the journal says this chunk landed
+        iv, _ = store.update(sid, chunk(i, r))
+        print("EMIT %s %d %s" % (sid, r, iv.tobytes().hex()), flush=True)
+        emitted += 1
+        if mode == "crash" and emitted == spec["crash_chunks"]:
+            os.kill(os.getpid(), signal.SIGKILL)   # no cleanup, no flush
+print("DONE", flush=True)
+"""
+
+
+def _stream_worker(spec):
+    """Run one _STREAM_WORKER subprocess; returns (emits, restored)
+    where emits maps (sid, round) -> i-vector hex bytes. A 'crash' run
+    dies by SIGKILL (expected); any other failure raises."""
+    import subprocess
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO_ROOT / 'src'}:{REPO_ROOT}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, "-c", _STREAM_WORKER, json.dumps(spec)],
+        capture_output=True, text=True, env=env, timeout=900)
+    if spec["mode"] == "crash":
+        assert out.returncode == -signal.SIGKILL, (
+            f"crash worker exited {out.returncode}, expected SIGKILL:\n"
+            f"{out.stderr[-2000:]}")
+    elif out.returncode != 0:
+        raise RuntimeError(f"stream worker ({spec['mode']}) failed:\n"
+                           f"{out.stderr[-3000:]}")
+    emits, restored = {}, 0
+    for line in out.stdout.splitlines():
+        if line.startswith("EMIT "):
+            _, sid, rnd, hexiv = line.split()
+            emits[(sid, int(rnd))] = hexiv
+        elif line.startswith("RESTORED "):
+            restored = int(line.split()[1])
+    return emits, restored
+
+
+def streaming_chaos_drill(overrides, n_sessions, n_rounds, chunk_frames,
+                          seed=0):
+    """The kill -9 drill, all three legs as subprocesses so reference
+    and crashed runs share one code path: (1) an uninterrupted run;
+    (2) the same traffic killed by SIGKILL mid-stream with the journal
+    on; (3) a restart that restores from the journal and finishes the
+    traffic. Every post-restart emission must be bit-identical to the
+    uninterrupted run's — the journal holds the accumulator bytes, so
+    recovery is a read, not a recompute."""
+    import tempfile
+    base = {"overrides": overrides, "n_sessions": n_sessions,
+            "n_rounds": n_rounds, "chunk_frames": chunk_frames,
+            "seed": seed}
+    # kill mid-round: some sessions have the round's chunk, some don't —
+    # recovery must resume each stream at ITS OWN journal cursor
+    crash_chunks = n_sessions * (n_rounds // 2) + n_sessions // 2
+    ref, _ = _stream_worker(dict(base, mode="run", journal_dir=None))
+    with tempfile.TemporaryDirectory() as d:
+        jd = os.path.join(d, "journal")
+        crash_emits, _ = _stream_worker(
+            dict(base, mode="crash", journal_dir=jd,
+                 crash_chunks=crash_chunks))
+        resume_emits, restored = _stream_worker(
+            dict(base, mode="resume", journal_dir=jd))
+    assert len(crash_emits) == crash_chunks
+    mismatched = [k for k, v in resume_emits.items() if ref.get(k) != v]
+    union = dict(crash_emits)
+    union.update(resume_emits)
+    return {
+        "n_sessions": n_sessions,
+        "n_rounds": n_rounds,
+        "chunks_before_kill": crash_chunks,
+        "sessions_restored": restored,
+        "emits_after_restart": len(resume_emits),
+        "post_restart_emits_bit_exact": not mismatched,
+        "no_emission_lost_or_duplicated": (
+            union == ref and len(crash_emits) + len(resume_emits)
+            == len(ref)),
+        "bit_exact": (not mismatched and restored == n_sessions
+                      and union == ref),
+    }
+
+
+def streaming_compare(C=64, D=12, R=32, n_sessions=12, n_rounds=6,
+                      chunk_frames=64, burst=48, seed=0):
+    """DESIGN.md §14: what the streaming serving layer costs and proves.
+
+    Measures, on one synthetic (UBM, TVM) pair: time-to-first-ivector
+    (cold with compiles, then warm); per-chunk update cost vs stream
+    position (additive stats -> flat, no dependence on how much audio
+    came before); the write-ahead journal's per-append cost against the
+    per-chunk update (the <=5% gate, measured directly like the
+    resilience guardrail); p50/p99 queue latency under a synchronized
+    burst through the adaptive admission queue; a hot-swap + rollback
+    under interleaved traffic (failed requests must be 0, rollback
+    bit-exact); and the subprocess kill -9 chaos drill."""
+    import tempfile
+
+    from repro.api.bundle import Bundle
+    from repro.configs.ivector_tvm import SMOKE
+    from repro.serving import (AdmissionQueue, IVectorExtractor,
+                               QueueFull, RolloutController,
+                               ServingConfig, SessionConfig, SessionStore)
+
+    overrides = dict(feat_dim=D, n_components=C, ivector_dim=R,
+                     posterior_top_k=min(8, C), frames_per_utt=chunk_frames)
+    cfg = SMOKE.with_overrides(**overrides)
+    key = jax.random.PRNGKey(seed)
+    ubm = _synthetic_full_ubm(key, C, D)
+    model = TV.init_model(jax.random.fold_in(key, 3), ubm.means, ubm.covs,
+                          R, cfg.formulation, cfg.prior_offset)
+    sv = ServingConfig(min_bucket=chunk_frames, max_bucket=4 * chunk_frames)
+
+    def chunk(i, r):
+        rng = np.random.RandomState(seed * 100003 + i * 1009 + r)
+        return rng.randn(chunk_frames, D).astype(np.float32)
+
+    out = {"config": {"n_components": C, "feat_dim": D, "rank": R,
+                      "n_sessions": n_sessions, "n_rounds": n_rounds,
+                      "chunk_frames": chunk_frames, "burst": burst}}
+
+    # -- time-to-first-ivector + per-chunk cost vs position ----------------
+    ex = IVectorExtractor(cfg, model, ubm, sv)
+    store = SessionStore(ex, SessionConfig(chunk_min_bucket=chunk_frames,
+                                           chunk_max_bucket=4 * chunk_frames))
+    t0 = time.perf_counter()
+    store.update("cold", chunk(99, 0))
+    cold_first = time.perf_counter() - t0          # includes every compile
+    firsts, by_position = [], [[] for _ in range(n_rounds)]
+    for i in range(n_sessions):
+        for r in range(n_rounds):
+            t0 = time.perf_counter()
+            store.update(f"s{i}", chunk(i, r))
+            dt = time.perf_counter() - t0
+            by_position[r].append(dt)
+            if r == 0:
+                firsts.append(dt)
+    flat = [float(np.median(ts)) for ts in by_position]
+    all_chunks = sorted(t for ts in by_position for t in ts)
+    out["time_to_first_ivector"] = {
+        "cold_including_compiles_s": cold_first,
+        "warm_p50_s": float(np.median(firsts)),
+        "warm_max_s": float(np.max(firsts)),
+    }
+    out["per_chunk_update"] = {
+        "p50_s": float(np.median(all_chunks)),
+        "p99_s": float(all_chunks[int(0.99 * (len(all_chunks) - 1))]),
+        "p50_by_stream_position_s": flat,
+        # additive stats: cost must not grow with accumulated audio
+        "last_over_first_position": flat[-1] / flat[0],
+    }
+
+    # -- journal overhead per chunk (direct measure, <=5% gate) ------------
+    with tempfile.TemporaryDirectory() as d:
+        jstore = SessionStore(ex, SessionConfig(
+            chunk_min_bucket=chunk_frames, chunk_max_bucket=4 * chunk_frames,
+            journal_dir=d))
+        jts, uts = [], []
+        for r in range(max(8, n_rounds)):
+            t0 = time.perf_counter()
+            jstore.update("j", chunk(7, r))
+            uts.append(time.perf_counter() - t0)
+        rec = jstore._record(jstore.session("j"))
+        for _ in range(32):
+            t0 = time.perf_counter()
+            jstore._journal.append(rec)
+            jts.append(time.perf_counter() - t0)
+        jts.sort(), uts.sort()
+        t_append = jts[len(jts) // 2]
+        t_update = uts[len(uts) // 2]
+        bytes_per = jstore._journal.bytes / jstore._journal.records
+        jstore.close_store()
+    out["journal"] = {
+        "append_p50_s": t_append,
+        "chunk_update_p50_s": t_update,
+        "overhead_fraction": t_append / t_update,
+        "bytes_per_record": bytes_per,
+    }
+
+    # -- p50/p99 under a synchronized burst --------------------------------
+    q = AdmissionQueue(ex, max_pending=max(8, burst // 2), store=store)
+    waits, shed = [], 0
+    for b in range(burst):                 # all submitted in one instant
+        sid = f"s{b % n_sessions}"
+        try:
+            q.submit(chunk(b % n_sessions, n_rounds + b // n_sessions),
+                     kind="first" if b < n_sessions else "refine", sid=sid)
+        except QueueFull:
+            shed += 1
+    while len(q):
+        for r in q.drain(q.batch_budget()).values():
+            if r.ivector is not None:
+                waits.append(r.wait_s)
+    waits.sort()
+    out["burst"] = {
+        "submitted": burst,
+        "served": len(waits),
+        "shed_at_submit": shed,
+        "shed_refine_preempted": q.stats["shed_refine"],
+        "p50_latency_s": waits[len(waits) // 2],
+        "p99_latency_s": waits[int(0.99 * (len(waits) - 1))],
+    }
+
+    # -- hot-swap under load: 0 failed requests, rollback bit-exact --------
+    with tempfile.TemporaryDirectory() as d:
+        p_same = os.path.join(d, "b_same")
+        p_new = os.path.join(d, "b_new")
+        Bundle(cfg=cfg, ubm=ubm, model=model).save(p_same)
+        import dataclasses as _dc
+        Bundle(cfg=cfg, ubm=ubm,
+               model=_dc.replace(model, T=model.T * 1.01)).save(p_new)
+        rc = RolloutController(ex, store=store, queue=q)
+        shadow = [chunk(50 + i, 0) for i in range(4)]
+        probe = ex.extract(shadow)              # pre-swap reference
+        quiet_iv = store.solve("s0")            # no chunks during swaps
+        errors, outcomes, rounds_served = 0, [], 0
+
+        def tick(r):
+            nonlocal errors, rounds_served
+            for i in range(1, n_sessions):      # s0 stays quiescent
+                try:
+                    q.submit(chunk(i, 200 + r), kind="refine", sid=f"s{i}")
+                except QueueFull:
+                    pass                        # backpressure, not an error
+            while len(q):
+                for res in q.drain(q.batch_budget()).values():
+                    if res.preempted or res.expired:
+                        continue                # shed by policy, reported
+                    if (res.ivector is None
+                            or not np.isfinite(res.ivector).all()):
+                        errors += 1
+                    else:
+                        rounds_served += 1
+
+        tick(0)
+        outcomes.append(rc.roll(p_same, shadow_utts=shadow).outcome)
+        tick(1)
+        outcomes.append(rc.roll(p_new, shadow_utts=shadow,
+                                max_cos_dist=1.99).outcome)
+        tick(2)
+        rolled_back = rc.rollback()
+        tick(3)
+        post = rc.live.extract(shadow)
+        out["rollout"] = {
+            "swap_outcomes": outcomes,
+            "requests_served_through_swaps": rounds_served,
+            "failed_requests": errors,
+            "rolled_back": rolled_back,
+            "rollback_extract_bit_exact": bool(np.array_equal(probe, post)),
+            "rollback_session_solve_bit_exact": bool(np.array_equal(
+                quiet_iv, store.solve("s0"))),
+            "draining_after_rollback": store.draining(),
+        }
+
+    # -- the kill -9 drill (subprocesses) ----------------------------------
+    out["chaos"] = streaming_chaos_drill(
+        overrides, n_sessions=n_sessions, n_rounds=n_rounds,
+        chunk_frames=chunk_frames, seed=seed)
+    return out
+
+
+def run_streaming(smoke: bool = False, out_path=None):
+    """The `streaming` bench case: writes ``BENCH_streaming.json`` at
+    the repo root (CI runs the smoke scale gated on bit-exact crash
+    recovery; the committed artifact is the full run).
+
+    Acceptance gates: the kill -9 drill must restore every session and
+    re-emit bit-exactly; the hot-swap drill must serve through both
+    swaps and the rollback with 0 failed requests and a bit-exact
+    rollback; at full scale the journal append must cost <= 5% of a
+    per-chunk update (at smoke scale both sides are sub-millisecond CPU
+    noise, so the ratio is reported but not gated)."""
+    kw = (dict(C=16, D=6, R=8, n_sessions=8, n_rounds=4,
+               chunk_frames=32, burst=24)
+          if smoke else
+          dict(C=64, D=12, R=32, n_sessions=12, n_rounds=6,
+               chunk_frames=64, burst=48))
+    r = streaming_compare(**kw)
+    r["smoke"] = smoke
+    thr = None if smoke else 0.05
+    frac = r["journal"]["overhead_fraction"]
+    chaos_ok = r["chaos"]["bit_exact"]
+    swap_ok = (r["rollout"]["failed_requests"] == 0
+               and r["rollout"]["swap_outcomes"] == ["swapped", "swapped"]
+               and r["rollout"]["rollback_extract_bit_exact"]
+               and r["rollout"]["rollback_session_solve_bit_exact"])
+    r["gate"] = {
+        "crash_recovery_bit_exact": chaos_ok,
+        "swap_zero_failed_requests_and_bit_exact_rollback": swap_ok,
+        "max_journal_overhead_fraction": thr,
+        "journal_overhead_fraction": frac,
+        "passed": chaos_ok and swap_ok and (thr is None or frac <= thr),
+    }
+    p = (Path(out_path) if out_path
+         else REPO_ROOT / "BENCH_streaming.json")
+    p.write_text(json.dumps(r, indent=2) + "\n")
+    if not r["gate"]["passed"]:
+        print(f"GATE FAILED: chaos bit_exact={chaos_ok}, "
+              f"swap clean={swap_ok}, journal overhead {frac:.4f} "
+              f"(allowed {thr})", file=sys.stderr)
+        raise SystemExit(1)
+    return r
+
+
 def end2end_recipe(n_iters: int = 2, seed: int = 0):
     """`recipe.run` wall time on the SMOKE-scale task: the full staged
     chain (features -> UBM -> TVM -> backend -> eval), so the perf
@@ -822,6 +1169,9 @@ if __name__ == "__main__":
         print(json.dumps(r, indent=2))
     elif "resilience" in sys.argv[1:]:
         r = run_resilience(smoke="--smoke" in sys.argv[1:])
+        print(json.dumps(r, indent=2))
+    elif "streaming" in sys.argv[1:]:
+        r = run_streaming(smoke="--smoke" in sys.argv[1:])
         print(json.dumps(r, indent=2))
     elif "end2end" in sys.argv[1:]:
         print(json.dumps(end2end_recipe(), indent=2))

@@ -112,6 +112,24 @@ def _file_sha256(path: Path) -> str:
     return h.hexdigest()
 
 
+def clean_stale_tmp(ckpt_dir) -> List[str]:
+    """Remove orphaned ``.tmp_*`` staging dirs — the debris of a writer
+    killed between the arrays.npz write and the atomic rename commit.
+    They are invisible to `latest_step`/`restore` (the commit never
+    happened, so torn state can never be loaded); this just reclaims the
+    disk. Only call when no save can be in flight — a live writer's
+    staging dir looks identical to a dead one's. Returns removed names."""
+    ckpt_dir = Path(ckpt_dir)
+    removed: List[str] = []
+    if not ckpt_dir.exists():
+        return removed
+    for p in ckpt_dir.glob(".tmp_*"):
+        if p.is_dir():
+            shutil.rmtree(p, ignore_errors=True)
+            removed.append(p.name)
+    return removed
+
+
 def latest_step(ckpt_dir) -> Optional[int]:
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():

@@ -233,6 +233,23 @@ def chunk_body(spec: EngineSpec, pack: UBMPack, feats_c,
     return ChunkStats(n, f, S, jnp.sum(lse), frames)
 
 
+def session_stats(spec: EngineSpec, pack: UBMPack, feats, mask=None):
+    """One streaming-session chunk: [F, D] frames (+ optional [F] mask)
+    -> (n [C], f [C, D], loglik [], frames []).
+
+    The serving session store (serving/session.py) accumulates these
+    per-stream: because Baum-Welch statistics are additive over frames,
+    summing per-chunk (n, f) over a live audio stream is EXACTLY the
+    statistics of the whole utterance so far — the chunk boundary is a
+    pure performance decision, like the frame mask (DESIGN.md §4, §14).
+    Runs THE canonical `chunk_body`, so a streamed chunk and a batch
+    request score through identical math.
+    """
+    cs = chunk_body(spec, pack, feats[None],
+                    None if mask is None else mask[None])
+    return cs.n[0], cs.f[0], cs.loglik, cs.frames
+
+
 # ---------------------------------------------------------------------------
 # Accumulators
 # ---------------------------------------------------------------------------

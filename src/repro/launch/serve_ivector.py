@@ -31,8 +31,8 @@ from repro.core import trainer as TR
 from repro.core import ubm as U
 from repro.data.speech import (FRAME_RATE, SpeechDataConfig,
                                build_ragged_dataset)
-from repro.serving import AdmissionQueue, IVectorExtractor, QueueFull, \
-    ServingConfig
+from repro.serving import (AdmissionQueue, IVectorExtractor, QueueFull,
+                           ServingConfig, SessionConfig, SessionStore)
 
 
 def build_state(cfg, data_cfg, train_iters: int):
@@ -47,6 +47,64 @@ def build_state(cfg, data_cfg, train_iters: int):
     state = TR.train(cfg, ubm, jax.numpy.asarray(fixed),
                      n_iters=train_iters)
     return state, utts, labels
+
+
+def serve_streaming(ex, utts, args):
+    """Streaming mode (DESIGN.md §14): every utterance becomes a live
+    stream of --chunk-frames chunks fed through the session store via
+    the admission queue. First chunks are submitted as 'first' (a user
+    is waiting), later ones as 'refine' (sheddable under overload); the
+    loop drains with the adaptive batch budget each tick. With
+    --journal-dir, a killed process restarts into the same sessions."""
+    store = SessionStore(ex, SessionConfig(
+        chunk_min_bucket=min(args.min_bucket, args.chunk_frames),
+        journal_dir=args.journal_dir))
+    if store.stats["restored"]:
+        print(f"  restored {store.stats['restored']} live sessions "
+              f"from {args.journal_dir} "
+              f"(torn tails dropped: {store.stats['journal_torn']})")
+    q = AdmissionQueue(ex, max_pending=args.max_pending or 64,
+                       default_timeout=args.deadline, store=store)
+    streams = {f"stream-{i}": np.asarray(u, np.float32)
+               for i, u in enumerate(utts)}
+    cursors = {sid: 0 for sid in streams}
+    t0 = time.time()
+    first_iv_s, served = {}, 0
+    while cursors:
+        for sid in list(cursors):       # round-robin: one chunk each
+            u, at = streams[sid], cursors[sid]
+            chunk = u[at:at + args.chunk_frames]
+            if chunk.shape[0] == 0:
+                store.close(sid)
+                del cursors[sid]
+                continue
+            try:
+                q.submit(chunk, kind="first" if at == 0 else "refine",
+                         sid=sid)
+            except QueueFull:
+                continue                # refine chunk sheds; retried next
+            cursors[sid] = at + args.chunk_frames
+        for r in q.drain(q.batch_budget()).values():
+            if r.ivector is not None:
+                served += 1
+                if r.sid not in first_iv_s:
+                    first_iv_s[r.sid] = time.time() - t0
+        while len(q):                   # flush leftovers before next round
+            for r in q.drain(q.batch_budget()).values():
+                served += r.ivector is not None
+    wall = time.time() - t0
+    frames = sum(u.shape[0] for u in streams.values())
+    print(f"streamed {len(streams)} sessions ({frames} frames) "
+          f"in {wall:.3f}s — {served} incremental i-vectors emitted")
+    if first_iv_s:
+        tfirst = sorted(first_iv_s.values())
+        print(f"  time-to-first-ivector: p50 "
+              f"{tfirst[len(tfirst) // 2]:.3f}s  "
+              f"max {tfirst[-1]:.3f}s")
+    h = q.health()
+    print(f"  readiness payload: ok={h['ok']} mode={h['mode']} "
+          f"queue={h['queue']}")
+    print(f"  sessions: {h['sessions']['stats']}")
 
 
 def main():
@@ -65,6 +123,15 @@ def main():
                          "no queue)")
     ap.add_argument("--deadline", type=float, default=30.0,
                     help="per-request deadline in seconds (queue mode)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="serve chunked streams through the crash-safe "
+                         "session store instead of whole utterances")
+    ap.add_argument("--chunk-frames", type=int, default=40,
+                    help="frames per streamed chunk (streaming mode)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="write-ahead session journal dir (streaming "
+                         "mode); restart with the same dir to restore "
+                         "live sessions bit-exact")
     args = ap.parse_args()
 
     if args.bundle is not None:
@@ -109,6 +176,9 @@ def main():
           f"canary latency {health['latency_s']:.3f}s")
     if not health["ok"]:
         raise SystemExit(f"serving session unhealthy: {health}")
+    if args.streaming:
+        serve_streaming(ex, utts, args)
+        return
     t0 = time.time()
     ex.extract(utts)                    # cold pass: compiles every bucket
     cold = time.time() - t0

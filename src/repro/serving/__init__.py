@@ -1,8 +1,14 @@
 """Production-facing serving layer: batched variable-length extraction
-with input validation, admission control, and runtime degradation."""
+with input validation, admission control, runtime degradation,
+crash-safe streaming sessions, and zero-downtime bundle rollout."""
 from repro.serving.extractor import (IVectorExtractor, RequestInfo,
                                      ServingConfig)
 from repro.serving.guard import AdmissionQueue, QueueFull, RequestResult
+from repro.serving.rollout import RolloutController, RolloutReport
+from repro.serving.session import (ChunkInfo, SessionConfig, SessionJournal,
+                                   SessionStore, StreamSession)
 
-__all__ = ["AdmissionQueue", "IVectorExtractor", "QueueFull",
-           "RequestInfo", "RequestResult", "ServingConfig"]
+__all__ = ["AdmissionQueue", "ChunkInfo", "IVectorExtractor", "QueueFull",
+           "RequestInfo", "RequestResult", "RolloutController",
+           "RolloutReport", "ServingConfig", "SessionConfig",
+           "SessionJournal", "SessionStore", "StreamSession"]

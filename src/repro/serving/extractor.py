@@ -55,11 +55,33 @@ from repro.core import ubm as U
 f32 = jnp.float32
 
 
+def bucket_cap(min_bucket: int, max_bucket: int) -> int:
+    """Largest bucket on the power-of-two grid (min_bucket * 2^k) that
+    does not exceed ``max_bucket`` — the shape long requests are
+    truncated to. Truncating to ``max_bucket`` itself would land
+    off-grid whenever it is not a power-of-two multiple of
+    ``min_bucket``, and every off-grid shape is a fresh jit."""
+    cap = max(1, int(min_bucket))
+    while cap * 2 <= max_bucket:
+        cap *= 2
+    return cap
+
+
+def bucket_for(n_frames: int, min_bucket: int, cap: int) -> int:
+    """Smallest power-of-two bucket holding ``n_frames``, capped."""
+    b = max(1, int(min_bucket))
+    while b < n_frames and b < cap:
+        b *= 2
+    return min(b, cap)
+
+
 @dataclass(frozen=True)
 class ServingConfig:
     max_batch: int = 16      # micro-batch size (batch dim of each jitted fn)
     min_bucket: int = 64     # smallest frame bucket
-    max_bucket: int = 8192   # hard cap; longer utterances are truncated
+    max_bucket: int = 8192   # hard cap; longer utterances are truncated to
+    #                          the largest power-of-two bucket <= this, so
+    #                          truncation always lands on the bucket grid
     length_norm: bool = True
 
 
@@ -104,6 +126,10 @@ class IVectorExtractor:
         # so each covers every bucket); the session starts at the config's
         # mode and demotes down engine.RESCORE_LADDER on kernel failure
         self.mode: str = cfg.rescore
+        # truncation target: the largest ON-GRID bucket <= max_bucket —
+        # a truncated request must reuse an existing jitted shape, not
+        # compile a fresh off-bucket one (e.g. min=64, max=100: cap=64)
+        self._cap = bucket_cap(serving.min_bucket, serving.max_bucket)
         self._fns: Dict[str, object] = {}
         # chaos hook (tests): modes whose device call raises, simulating
         # a kernel failure
@@ -136,10 +162,7 @@ class IVectorExtractor:
     # -- bucketing ----------------------------------------------------------
 
     def bucket_for(self, n_frames: int) -> int:
-        b = self.serving.min_bucket
-        while b < n_frames and b < self.serving.max_bucket:
-            b *= 2
-        return min(b, self.serving.max_bucket)
+        return bucket_for(n_frames, self.serving.min_bucket, self._cap)
 
     def buckets(self) -> List[int]:
         return sorted(self._seen_buckets)
@@ -211,8 +234,8 @@ class IVectorExtractor:
         if u.ndim != 2 or u.shape[1] != D:
             raise ValueError(f"utterance must be [F, {D}], got {u.shape}")
         info = RequestInfo(n_frames=int(u.shape[0]))
-        if u.shape[0] > self.serving.max_bucket:
-            u = u[:self.serving.max_bucket]
+        if u.shape[0] > self._cap:
+            u = u[:self._cap]
             info.truncated = True
             info.n_frames = int(u.shape[0])
             self.stats["truncated"] += 1

@@ -389,6 +389,58 @@ def test_chaos_checkpoint_missing_manifest(tmp_path):
             {"x": np.zeros((4,), np.float32)})
 
 
+def test_chaos_torn_save_kill_between_arrays_and_manifest(tmp_path):
+    """Kill -9 during `CheckpointManager.save` between the arrays.npz
+    write and the manifest commit: the staging dir was never renamed,
+    so the torn state is INVISIBLE to restore (atomicity, not
+    detection); `restore_latest_verified` serves the previous step with
+    nothing to skip, and `clean_stale_tmp` reclaims the debris."""
+    _save_steps(tmp_path, [1, 2])
+    # exactly what save() leaves when killed at that point: a .tmp_*
+    # staging dir holding arrays.npz, no manifest, no rename
+    stage = tmp_path / ".tmp_killed"
+    stage.mkdir()
+    np.savez(stage / "arrays.npz", x=np.full((4,), 3.0, np.float32))
+    assert CM.latest_step(tmp_path) == 2          # staging is invisible
+    mgr = CM.CheckpointManager(tmp_path)
+    _, step, _ = mgr.restore_latest_verified(
+        {"x": np.zeros((4,), np.float32)})
+    assert step == 2 and mgr.skipped_corrupt == []
+    assert CM.clean_stale_tmp(tmp_path) == [".tmp_killed"]
+    assert not stage.exists()
+    # the non-atomic variant (a committed step dir whose manifest never
+    # landed — e.g. a reordering filesystem) is skipped loudly, not read
+    broken = tmp_path / "step_00000003"
+    broken.mkdir()
+    np.savez(broken / "arrays.npz", x=np.full((4,), 3.0, np.float32))
+    mgr2 = CM.CheckpointManager(tmp_path)
+    _, step, _ = mgr2.restore_latest_verified(
+        {"x": np.zeros((4,), np.float32)})
+    assert step == 2 and mgr2.skipped_corrupt == [3]
+
+
+def test_chaos_session_journal_inherits_torn_write_guarantee(tmp_path):
+    """The streaming session WAL (serving/session.py) honours the same
+    contract as the checkpoint store: a record torn by a mid-append
+    kill is dropped whole at replay — never half-applied — and the
+    verified prefix survives byte-for-byte."""
+    from repro.serving.session import SessionJournal
+    n1, f1 = np.arange(4, dtype=np.float32), np.ones((4, 3), np.float32)
+    j, _ = SessionJournal.open(tmp_path / "wal.log", 4, 3)
+    j.append({"kind": "update", "sid": "s", "seq": 1, "n": n1, "f": f1})
+    j.append({"kind": "update", "sid": "s", "seq": 2,
+              "n": n1 * 2, "f": f1 * 2})
+    j.close()
+    wal = tmp_path / "wal.log"
+    wal.write_bytes(wal.read_bytes()[:-15])       # kill mid-append
+    j2, recs = SessionJournal.open(wal, 4, 3)
+    assert j2.torn_tail
+    assert len(recs) == 1 and recs[0]["seq"] == 1
+    np.testing.assert_array_equal(recs[0]["n"], n1)
+    np.testing.assert_array_equal(recs[0]["f"], f1)
+    j2.close()
+
+
 def test_chaos_checkpoint_retention_keeps_anchors(tmp_path):
     mgr = CM.CheckpointManager(tmp_path, save_interval=1, keep=2,
                                keep_every=4)
@@ -530,7 +582,7 @@ def test_serving_chaos_admission_queue_sheds_load(served):
     assert not res[b].expired and np.isfinite(res[b].ivector).all()
     assert res[b].wait_s == 10.0
     assert q.stats == {"submitted": 2, "shed_full": 1,
-                       "shed_deadline": 1, "served": 1}
+                       "shed_deadline": 1, "shed_refine": 0, "served": 1}
     assert len(q) == 0
 
 

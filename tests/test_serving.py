@@ -124,6 +124,30 @@ def test_extractor_caches_compiles_per_bucket():
     assert ex.stats["requests"] == 12
 
 
+def test_extractor_truncation_lands_on_bucket_grid():
+    """A request truncated at max_frames must land in an exact
+    power-of-two bucket: an off-grid max_bucket (here 100) previously
+    made every truncated request a fresh off-bucket jit. Truncation now
+    targets the largest on-grid bucket <= max_bucket."""
+    cfg = _cfg("augmented")
+    state = _toy_state("augmented")
+    ex = IVectorExtractor.from_state(
+        cfg, state, ServingConfig(min_bucket=16, max_bucket=100))
+    assert ex._cap == 64                 # 16 * 2^2; 128 would exceed 100
+    assert ex.bucket_for(300) == 64
+    long_u = np.asarray(
+        jax.random.normal(jax.random.fold_in(KEY, 70), (300, 5)),
+        np.float32)
+    iv, infos = ex.extract([long_u], return_info=True)
+    assert infos[0].truncated
+    assert infos[0].n_frames == 64 and infos[0].bucket == 64
+    assert ex.buckets() == [64]          # on-grid: no off-bucket compile
+    # truncation == extracting the kept prefix directly, bit-for-bit
+    iv_prefix = ex.extract([long_u[:64]])
+    np.testing.assert_array_equal(iv, iv_prefix)
+    assert ex.stats["compiles"] == 1     # the prefix reused the jit
+
+
 # ---------------------------------------------------------------------------
 # Satellite regressions
 # ---------------------------------------------------------------------------
