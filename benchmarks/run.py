@@ -81,6 +81,21 @@ def main() -> None:
         f";strategies_agree={at['all_measured_strategies_agree']}"
         f";max_regret={at['max_tuning_regret']:.2f}"))
 
+    # --- static-analysis gate (DESIGN.md §15): the merged tree must run
+    # clean; the committed BENCH_check.json records rule counts and
+    # per-pass wall time -----------------------------------------------------
+    import json
+    from repro.analysis.check.cli import report_json, run_all as check_all
+    rep = report_json(check_all(["src"]))
+    with open("BENCH_check.json", "w") as fh:
+        json.dump(rep, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    total_wall = sum(rep["wall_s"].values())
+    rows.append(("check/suite", f"{total_wall * 1e6:.0f}",
+                 f"unsuppressed={rep['unsuppressed']}"
+                 f";suppressed={rep['suppressed']}"
+                 f";rules_hit={sum(1 for v in rep['rules'].values() if v)}"))
+
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us},{derived}")

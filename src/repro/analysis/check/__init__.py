@@ -1,0 +1,27 @@
+"""Static-analysis suite for the i-vector stack (DESIGN.md §15).
+
+Three passes over three artefact layers:
+
+  * :func:`check_jaxpr`  — trace a function to a jaxpr and walk it for
+    numerics hazards (NUM001-NUM004);
+  * :func:`check_kernel` — verify a registered Pallas kernel's static
+    metadata: grid/BlockSpec consistency, write-write races, DMA ring
+    discipline, VMEM residency (KRN001-KRN004);
+  * :func:`check_source` — AST lint of the Python source itself
+    (SRC001-SRC003, DET001).
+
+``run_all`` runs every pass over the repo's registered entry points and
+kernels plus a source sweep; the CLI (``python -m repro.analysis.check``)
+wraps it and exits nonzero on any unsuppressed finding.
+"""
+from repro.analysis.check.findings import Finding, Rule, RULES, Severity
+from repro.analysis.check.jaxpr_pass import check_jaxpr
+from repro.analysis.check.kernel_pass import check_kernel, check_all_kernels
+from repro.analysis.check.source_pass import check_source
+from repro.analysis.check.cli import main, run_all
+
+__all__ = [
+    "Finding", "Rule", "RULES", "Severity",
+    "check_jaxpr", "check_kernel", "check_all_kernels", "check_source",
+    "run_all", "main",
+]

@@ -1,0 +1,120 @@
+"""CLI driver: ``python -m repro.analysis.check [--rules ...] [paths]``.
+
+Runs the three passes (jaxpr over registered entries, kernel verifier
+over the registry, source lint over the given paths — default ``src/``),
+prints findings, and exits 1 on any UNSUPPRESSED finding. ``--report``
+writes the structured summary JSON the benchmark row commits as
+``BENCH_check.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.check.findings import Finding, RULES
+
+
+def run_all(paths: Sequence[str] = ("src",),
+            rules: Optional[Sequence[str]] = None) -> Dict:
+    """All three passes; returns the structured report dict."""
+    # imports deferred so `--help` (and source-only runs) stay instant
+    from repro.analysis.check.entries import build_entries
+    from repro.analysis.check.jaxpr_pass import check_jaxpr
+    from repro.analysis.check.kernel_pass import check_all_kernels
+    from repro.analysis.check.source_pass import check_source
+
+    wall: Dict[str, float] = {}
+    findings: List[Finding] = []
+
+    t0 = time.perf_counter()
+    for e in build_entries():
+        findings += check_jaxpr(e.fn, *e.args, entry=e.name,
+                                input_roles=e.roles,
+                                frame_extent=e.frame_extent)
+    wall["jaxpr"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    findings += check_all_kernels()
+    wall["kernel"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    findings += check_source(list(paths))
+    wall["source"] = time.perf_counter() - t0
+
+    if rules:
+        keep = set(rules)
+        findings = [f for f in findings if f.rule_id in keep]
+
+    counts: Dict[str, int] = {rid: 0 for rid in RULES}
+    suppressed = 0
+    for f in findings:
+        if f.suppressed:
+            suppressed += 1
+        else:
+            counts[f.rule_id] = counts.get(f.rule_id, 0) + 1
+    return {
+        "findings": findings,
+        "counts": {k: v for k, v in counts.items()},
+        "suppressed": suppressed,
+        "unsuppressed": sum(counts.values()),
+        "wall_s": wall,
+    }
+
+
+def report_json(report: Dict) -> Dict:
+    """The committed-artifact view (no Finding objects, stable keys)."""
+    return {
+        "rules": {rid: report["counts"].get(rid, 0) for rid in RULES},
+        "suppressed": report["suppressed"],
+        "unsuppressed": report["unsuppressed"],
+        "wall_s": {k: round(v, 4) for k, v in report["wall_s"].items()},
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="Static analysis: jaxpr numerics, Pallas kernel "
+                    "metadata, source lint (DESIGN.md §15).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/dirs for the source pass (default: src)")
+    ap.add_argument("--rules", nargs="+", metavar="RULE",
+                    help="restrict to these rule ids")
+    ap.add_argument("--report", metavar="FILE",
+                    help="write summary JSON (BENCH_check.json format)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="print suppressed findings too")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        unknown = set(args.rules) - set(RULES)
+        if unknown:
+            ap.error(f"unknown rules: {sorted(unknown)} "
+                     f"(known: {sorted(RULES)})")
+
+    report = run_all(args.paths or ["src"], rules=args.rules)
+
+    shown = 0
+    for f in report["findings"]:
+        if f.suppressed and not args.show_suppressed:
+            continue
+        print(f.format())
+        shown += 1
+    n_bad = report["unsuppressed"]
+    print(f"repro-check: {n_bad} finding(s), "
+          f"{report['suppressed']} suppressed "
+          f"[jaxpr {report['wall_s']['jaxpr']:.2f}s, "
+          f"kernel {report['wall_s']['kernel']:.2f}s, "
+          f"source {report['wall_s']['source']:.2f}s]")
+    if args.report:
+        with open(args.report, "w") as fh:
+            json.dump(report_json(report), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,110 @@
+"""Registered entry points the jaxpr pass traces (DESIGN.md §15.2).
+
+Each entry builds DETERMINISTIC toy operands (no PRNG — analysis code
+must itself lint clean, and a fixed linspace is as good a probe shape as
+a random draw) and declares input roles for the mask-domination taint.
+
+The frame count is prime (F=97) so the frame axis is identified by
+extent without aliasing C/D/K/R; U=3 keeps U*F != F unambiguous.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alignment, backend, engine, tvm, ubm
+
+f32 = jnp.float32
+
+C, D, K, R = 8, 6, 4, 8
+F, U = 97, 3
+
+
+class Entry(NamedTuple):
+    name: str
+    fn: Callable
+    args: tuple
+    roles: Sequence[Optional[str]]
+    frame_extent: Optional[int] = None
+
+
+def _toy_full_gmm() -> ubm.FullGMM:
+    means = jnp.linspace(-1.0, 1.0, C * D, dtype=f32).reshape(C, D)
+    v = jnp.linspace(0.5, 1.5, C * D, dtype=f32).reshape(C, D)
+    covs = jax.vmap(jnp.diag)(v) + 0.05 * jnp.ones((C, D, D), f32)
+    weights = jnp.full((C,), 1.0 / C, f32)
+    return ubm.FullGMM(weights, means, covs)
+
+
+def _toy_feats():
+    x = jnp.linspace(-2.0, 2.0, U * F * D, dtype=f32).reshape(U, F, D)
+    mask = (jnp.arange(F)[None, :] < jnp.array([F, 80, 55])[:, None])
+    return x, mask.astype(f32)
+
+
+def _toy_stats():
+    n = jnp.linspace(0.1, 5.0, U * C, dtype=f32).reshape(U, C)
+    f = jnp.linspace(-1.0, 1.0, U * C * D, dtype=f32).reshape(U, C, D)
+    return n, f
+
+
+def _toy_tvm(estep: str = "dense"):
+    gmm = _toy_full_gmm()
+    # deterministic full-rank T: shifted linspace folded per component
+    T = (jnp.linspace(-0.5, 0.5, C * D * R, dtype=f32).reshape(C, D, R)
+         + 0.01 * jnp.eye(D, R)[None])
+    model = tvm.TVModel(T=T, Sigma=gmm.covs, prior=jnp.zeros((R,), f32),
+                        means=gmm.means, formulation="standard")
+    return model, tvm.precompute(model, estep=estep)
+
+
+def build_entries() -> List[Entry]:
+    gmm = _toy_full_gmm()
+    pack = engine.pack_ubm(gmm)
+    feats, mask = _toy_feats()
+    n, f = _toy_stats()
+    model, pre = _toy_tvm("dense")
+    model_p, pre_p = _toy_tvm("packed")
+    spec = engine.EngineSpec(n_components=C, top_k=K, floor=0.025,
+                             second_order="full", rescore="dense")
+
+    ivecs = jnp.linspace(-1.0, 1.0, 6 * R, dtype=f32).reshape(6, R)
+    labels_cov = jnp.eye(R, dtype=f32)
+    plda = backend.PLDA(mean=jnp.zeros((R,), f32),
+                        B=labels_cov * 0.8 + 0.1,
+                        W=labels_cov * 0.5 + 0.05)
+
+    bf16 = jnp.bfloat16
+    return [
+        Entry("engine.chunk_body",
+              lambda p, x, m: engine.chunk_body(spec, p, x, m),
+              (pack, feats, mask), (None, "feats", "mask"), (F, U * F)),
+        Entry("alignment.align_frames",
+              lambda fu, di, x, m: alignment.align_frames(
+                  x, fu, di, top_k=K, mask=m, with_loglik=True),
+              (gmm, gmm.to_diag(), feats.reshape(U * F, D),
+               mask.reshape(U * F)),
+              (None, None, "feats", "mask"), (F, U * F)),
+        Entry("tvm.posterior",
+              lambda mo, pr, nn, ff: tvm.posterior(mo, pr, nn, ff),
+              (model, pre, n, f), (None, None, None, None), None),
+        Entry("tvm.posterior[packed,bf16]",
+              lambda mo, pr, nn, ff: tvm.posterior(
+                  mo, pr, nn, ff, estep_dtype="bfloat16"),
+              (model_p, pre_p, n, f), (None, None, None, None), None),
+        Entry("tvm.em_accumulate",
+              lambda mo, pr, nn, ff: tvm.em_accumulate(mo, pr, nn, ff),
+              (model, pre, n, f), (None, None, None, None), None),
+        Entry("tvm.em_accumulate[packed,bf16]",
+              lambda mo, pr, nn, ff: tvm.em_accumulate(
+                  mo, pr, nn, ff, estep_dtype="bfloat16"),
+              (model_p, pre_p, n, f), (None, None, None, None), None),
+        Entry("backend.plda_score_matrix",
+              backend.plda_score_matrix,
+              (plda, ivecs, ivecs), (None, None, None), None),
+        Entry("backend.plda_score_pairs",
+              backend.plda_score_pairs,
+              (plda, ivecs, ivecs), (None, None, None), None),
+    ]

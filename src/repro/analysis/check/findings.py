@@ -1,0 +1,114 @@
+"""Finding/Rule records and the rule catalog (DESIGN.md §15.1).
+
+Severity policy: ``error`` findings fail CI unconditionally; ``warning``
+findings fail CI too unless suppressed — the repo's runs-clean policy
+admits no unsuppressed finding of any severity at merge. The split exists
+so downstream consumers (report JSON, editors) can rank them.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+class Severity(str, enum.Enum):
+    ERROR = "error"
+    WARNING = "warning"
+
+
+@dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    severity: Severity
+    title: str
+    rationale: str
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule_id: str
+    severity: Severity
+    loc: str                     # "file:line" or "entry:<name>" / "kernel:<name>"
+    message: str
+    fix_hint: str = ""
+    suppressed: bool = False
+
+    def format(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return (f"{self.loc}: {self.severity.value} {self.rule_id}{tag}: "
+                f"{self.message}"
+                + (f"\n    hint: {self.fix_hint}" if self.fix_hint else ""))
+
+
+_R = Rule
+RULES: Dict[str, Rule] = {r.rule_id: r for r in [
+    # -- Pass 1: jaxpr numerics -------------------------------------------
+    _R("NUM001", Severity.ERROR,
+       "low-precision contraction without f32 accumulation",
+       "A dot/einsum whose operands originate in bf16/fp16/fp8 must pin "
+       "preferred_element_type=float32; MXU accumulation in the input "
+       "dtype loses the paper's zeroth-order stats to cancellation."),
+    _R("NUM002", Severity.ERROR,
+       "LU-based inverse/solve in an entry point",
+       "jnp.linalg.inv/solve/slogdet lower to a pivoted LU ('lu' "
+       "primitive). All covariances in this codebase are SPD; the "
+       "sanctioned path is Cholesky + triangular solves, which is "
+       "backward-stable where LU pivoting on near-singular covariances "
+       "is not."),
+    _R("NUM003", Severity.ERROR,
+       "frame-axis reduction not dominated by the mask",
+       "A reduction over the frame axis whose operand depends on the "
+       "features but not on the validity mask silently folds padding "
+       "frames into sufficient statistics."),
+    _R("NUM004", Severity.ERROR,
+       "float64 leak",
+       "A float64 intermediate in a traced entry point doubles bandwidth "
+       "and falls off the TPU fast path; f64 is host-side only."),
+    # -- Pass 2: Pallas kernel metadata -----------------------------------
+    _R("KRN001", Severity.ERROR,
+       "block/grid divisibility violation without pad-and-clip wrapper",
+       "A dimension not divisible by its block size yields a partial "
+       "edge block; unless the host wrapper pads and clips, the kernel "
+       "reads/writes out of bounds or computes on garbage lanes."),
+    _R("KRN002", Severity.ERROR,
+       "output write-write race or coverage gap",
+       "Two grid points mapping to the same output block outside a "
+       "declared reduction axis race; an output block no grid point maps "
+       "to is left uninitialised."),
+    _R("KRN003", Severity.ERROR,
+       "DMA ring discipline violation",
+       "Every async copy start() needs a matching wait(); a ring slot "
+       "j % depth must be waited before reuse and drained at the end, "
+       "else the kernel deadlocks or reads in-flight data."),
+    _R("KRN004", Severity.WARNING,
+       "VMEM residency over budget",
+       "Per-grid-step blocks + scratch exceeding the roofline VMEM "
+       "budget forces spills (or compile failure) at paper scale."),
+    # -- Pass 3: source AST ------------------------------------------------
+    _R("SRC001", Severity.ERROR,
+       "jnp.linalg.inv call",
+       "Explicit matrix inverse is never the sanctioned path; use "
+       "cho_solve / triangular_solve against the factorisation."),
+    _R("SRC002", Severity.WARNING,
+       "seeded PRNGKey literal outside tests",
+       "A hard-coded PRNGKey(<literal>) in library/launch code bakes a "
+       "seed into production behaviour; thread the key from the caller "
+       "or suppress where the fixed seed is the documented contract."),
+    _R("SRC003", Severity.ERROR,
+       "host synchronisation inside a jitted/scanned body",
+       "float()/.item()/np.asarray on a traced value forces a device "
+       "sync (or a tracer error) inside jit/scan; keep host reads "
+       "outside the traced region."),
+    _R("DET001", Severity.WARNING,
+       "unordered exit reduction where bit-exactness is claimed",
+       "exit_reduce='psum' reduces in arrival order; streaming-session "
+       "equivalence tests require exit_reduce='ordered'."),
+]}
+
+
+def make_finding(rule_id: str, loc: str, message: str,
+                 fix_hint: str = "", suppressed: bool = False) -> Finding:
+    rule = RULES[rule_id]
+    return Finding(rule_id=rule_id, severity=rule.severity, loc=loc,
+                   message=message, fix_hint=fix_hint, suppressed=suppressed)

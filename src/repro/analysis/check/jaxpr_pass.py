@@ -1,0 +1,261 @@
+"""Pass 1: jaxpr walker for numerics hazards (NUM001-NUM004).
+
+Works on ``jax.make_jaxpr`` output and recurses into every sub-jaxpr
+(pjit/closed_call, scan, while, cond), so the checks see through the
+engine's scan-over-chunks and the sharded trainer's pjit regions.
+
+Version note: on the pinned jax there is no public ``jax.extend.core``;
+the walker duck-types jaxpr containers (``.jaxpr`` for ClosedJaxpr,
+``.eqns`` for Jaxpr) instead of isinstance checks.
+
+Mask-domination (NUM003) is a taint analysis: entry inputs are tagged
+('feats' | 'mask' | other), tags union through every equation, and a
+frame-axis reduction whose operand carries 'feats' but not 'mask' is
+flagged. The frame axis is identified by extent — entry builders use a
+prime frame count so no other axis aliases it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import numpy as np
+
+from repro.analysis import optable
+from repro.analysis.check.findings import Finding, make_finding
+
+_MAX_ORIGIN_DEPTH = 3    # convert_element_type chains to walk through
+
+
+def _sub_jaxprs(params: dict):
+    """Yield every jaxpr nested in an eqn's params, any jax version."""
+    for v in params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for sub in vs:
+            if hasattr(sub, "jaxpr"):          # ClosedJaxpr
+                yield sub.jaxpr
+            elif hasattr(sub, "eqns"):         # raw Jaxpr
+                yield sub
+
+
+def _aval(var):
+    return getattr(var, "aval", None)
+
+
+def _dtype_name(var) -> Optional[str]:
+    aval = _aval(var)
+    dt = getattr(aval, "dtype", None)
+    return None if dt is None else np.dtype(dt).name
+
+
+def _shape(var) -> Tuple[int, ...]:
+    aval = _aval(var)
+    return tuple(getattr(aval, "shape", ()) or ())
+
+
+def _eqn_loc(entry: str, eqn) -> str:
+    """Best-effort source location from the eqn's source_info."""
+    try:
+        frame = jax._src.source_info_util.user_frame(eqn.source_info)
+        if frame is not None:
+            return f"{frame.file_name}:{frame.start_line}"
+    except Exception:
+        pass
+    return f"entry:{entry}"
+
+
+class _Walker:
+    def __init__(self, entry: str, frame_extents: Set[int]):
+        self.entry = entry
+        self.frame_extents = frame_extents
+        self.findings: List[Finding] = []
+        # var id -> origin dtype (pre-promotion), threaded through casts
+        self.origin_dtype: Dict[int, str] = {}
+        # var id -> taint tags {'feats','mask'}
+        self.tags: Dict[int, Set[str]] = {}
+        self.has_mask_input = False
+
+    # -- taint plumbing ----------------------------------------------------
+
+    def _tag_of(self, var) -> Set[str]:
+        return self.tags.get(id(var), set())
+
+    def _seed(self, var, tags: Set[str], origin: Optional[str]):
+        self.tags[id(var)] = set(tags)
+        if origin:
+            self.origin_dtype[id(var)] = origin
+
+    def _origin_of(self, var, depth: int = 0) -> Optional[str]:
+        got = self.origin_dtype.get(id(var))
+        if got is not None:
+            return got
+        if depth >= _MAX_ORIGIN_DEPTH:
+            return _dtype_name(var)
+        return _dtype_name(var)
+
+    # -- checks ------------------------------------------------------------
+
+    def _check_contraction(self, eqn):
+        loc = _eqn_loc(self.entry, eqn)
+        pref = eqn.params.get("preferred_element_type")
+        pref_name = None if pref is None else np.dtype(pref).name
+        low = []
+        for v in eqn.invars:
+            # the dtype AT the dot decides the MXU accumulation mode; a
+            # bf16 origin upcast to f32 beforehand is already safe
+            actual = _dtype_name(v)
+            if actual in optable.LOW_PRECISION_DTYPES:
+                low.append(actual)
+        if low and pref_name not in ("float32", "float64"):
+            self.findings.append(make_finding(
+                "NUM001", loc,
+                f"dot_general with {'/'.join(sorted(set(low)))}-origin "
+                f"operands accumulates in "
+                f"{pref_name or _dtype_name(eqn.outvars[0])}",
+                "pass preferred_element_type=jnp.float32 to the "
+                "dot/einsum"))
+
+    def _check_lu(self, eqn):
+        self.findings.append(make_finding(
+            "NUM002", _eqn_loc(self.entry, eqn),
+            f"'{eqn.primitive.name}' (pivoted LU) reached from entry "
+            f"'{self.entry}'",
+            "replace jnp.linalg.inv/solve/slogdet with "
+            "cholesky + cho_solve/triangular_solve (SPD operands)"))
+
+    def _check_reduce(self, eqn):
+        if not self.frame_extents or not self.has_mask_input:
+            return
+        axes = eqn.params.get("axes", ())
+        operand = eqn.invars[0]
+        shape = _shape(operand)
+        frame_axes = [a for a in axes
+                      if a < len(shape) and shape[a] in self.frame_extents]
+        if not frame_axes:
+            return
+        tags = self._tag_of(operand)
+        if "feats" in tags and "mask" not in tags:
+            self.findings.append(make_finding(
+                "NUM003", _eqn_loc(self.entry, eqn),
+                f"'{eqn.primitive.name}' reduces the frame axis "
+                f"(extent {shape[frame_axes[0]]}) of a feature-derived "
+                "value with no mask in its dataflow",
+                "apply jnp.where(mask, value, neutral) before the "
+                "reduction"))
+
+    def _check_f64(self, var, eqn):
+        if _dtype_name(var) == "float64":
+            self.findings.append(make_finding(
+                "NUM004", _eqn_loc(self.entry, eqn),
+                f"float64 value produced by '{eqn.primitive.name}' in "
+                f"entry '{self.entry}'",
+                "keep device code f32; cast host-side doubles before "
+                "tracing"))
+
+    # -- walk --------------------------------------------------------------
+
+    def walk(self, jaxpr) -> None:
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            in_tags: Set[str] = set()
+            for v in eqn.invars:
+                in_tags |= self._tag_of(v)
+
+            if prim in optable.CONTRACTION_PRIMITIVES:
+                self._check_contraction(eqn)
+            elif prim in optable.LU_FAMILY_PRIMITIVES:
+                self._check_lu(eqn)
+            elif prim in optable.REDUCE_PRIMITIVES:
+                self._check_reduce(eqn)
+
+            # propagate origin dtype through pure casts so NUM001 sees
+            # bf16 operands promoted to f32 immediately before the dot
+            if prim in optable.CAST_PRIMITIVES and eqn.invars:
+                src = eqn.invars[0]
+                origin = self.origin_dtype.get(id(src), _dtype_name(src))
+                for out in eqn.outvars:
+                    self._seed(out, in_tags, origin)
+            else:
+                for out in eqn.outvars:
+                    self._seed(out, in_tags, None)
+
+            for out in eqn.outvars:
+                self._check_f64(out, eqn)
+
+            for sub in _sub_jaxprs(eqn.params):
+                self._walk_sub(sub, eqn, in_tags)
+
+    def _walk_sub(self, sub, eqn, fallback_tags: Set[str]) -> None:
+        """Recurse into a sub-jaxpr, aligning tags where arity permits.
+
+        pjit/closed_call/cond: trailing invars align 1:1 with the outer
+        eqn's trailing invars (leading ones are consts). scan: invars are
+        consts + carry + xs, also trailing-aligned. When arities cannot
+        be aligned (custom primitives), every inner invar inherits the
+        union of outer tags — conservative in the safe direction for
+        NUM003 only if the union contains 'mask' when any outer operand
+        does; a pure-feats union still flags correctly.
+        """
+        inner = list(sub.invars)
+        outer = list(eqn.invars)
+        n = min(len(inner), len(outer))
+        for iv in inner[:len(inner) - n]:
+            self._seed(iv, fallback_tags, None)
+        for iv, ov in zip(inner[len(inner) - n:], outer[len(outer) - n:]):
+            origin = self.origin_dtype.get(id(ov), _dtype_name(ov))
+            self._seed(iv, self._tag_of(ov) or fallback_tags, origin)
+        self.walk(sub)
+        # while-loop bodies run again with loop-carried outputs feeding
+        # inputs; a second pass propagates tags across iterations
+        if eqn.primitive.name == "while":
+            carry_tags: Set[str] = set()
+            for ov in sub.outvars:
+                carry_tags |= self._tag_of(ov)
+            if carry_tags:
+                for iv in inner:
+                    self._seed(iv, self._tag_of(iv) | carry_tags, None)
+                self.walk(sub)
+
+
+def check_jaxpr(fn, *avals, entry: str = None,
+                input_roles: Optional[Sequence[Optional[str]]] = None,
+                frame_extent=None,
+                static_argnums=(), **kw_avals) -> List[Finding]:
+    """Trace ``fn`` at ``avals`` and walk the jaxpr for NUM001-NUM004.
+
+    ``input_roles`` tags each positional input as 'feats', 'mask', or
+    None (parameters); NUM003 only activates when a 'mask' role is
+    present. ``frame_extent`` (int or iterable of ints) identifies the
+    frame axis by size; pass a prime (and its flattened u*F multiple) to
+    avoid aliasing other axes.
+    """
+    name = entry or getattr(fn, "__name__", "<fn>")
+    closed = jax.make_jaxpr(fn, static_argnums=static_argnums)(
+        *avals, **kw_avals)
+    jaxpr = closed.jaxpr
+    if frame_extent is None:
+        extents: Set[int] = set()
+    elif isinstance(frame_extent, int):
+        extents = {frame_extent}
+    else:
+        extents = set(frame_extent)
+    walker = _Walker(name, extents)
+
+    flat_roles: List[Optional[str]] = []
+    if input_roles is not None:
+        for role, a in zip(input_roles, avals):
+            leaves = jax.tree_util.tree_leaves(a)
+            flat_roles.extend([role] * len(leaves))
+    for a in jax.tree_util.tree_leaves(list(kw_avals.values())):
+        flat_roles.append(None)
+
+    walker.has_mask_input = "mask" in (input_roles or ())
+    for i, var in enumerate(jaxpr.invars):
+        role = flat_roles[i] if i < len(flat_roles) else None
+        tags = {role} if role in ("feats", "mask") else set()
+        walker._seed(var, tags, _dtype_name(var))
+    for var in jaxpr.constvars:
+        walker._seed(var, set(), _dtype_name(var))
+
+    walker.walk(jaxpr)
+    return walker.findings

@@ -1,0 +1,189 @@
+"""Pass 3: source AST lint (SRC001-SRC003, DET001).
+
+Pure-syntax checks that need no tracing, so they catch hazards in code
+paths no entry point reaches (launch scripts, tools, dead branches).
+
+Suppression: a comment ``# repro-check: disable=RULE`` (comma-separated
+for several rules) on the offending line or the line directly above it
+marks the finding suppressed; suppressed findings are reported but do
+not fail the run. Suppression is source-pass only — jaxpr/kernel
+findings have no stable source line to anchor a comment to.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Sequence, Set, Union
+
+from repro.analysis.check.findings import Finding, make_finding
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-check:\s*disable=([A-Z0-9, ]+)")
+
+_HOST_SYNC_NAMES = {"float", "int", "bool"}
+_HOST_SYNC_ATTRS = {"item", "asarray", "array"}
+# NOTE: bare 'map' is excluded — jax.tree.map/tree_map callbacks run on
+# host and vastly outnumber lax.map bodies; flagging them is pure noise.
+_TRACED_CONSUMERS = {"scan", "fori_loop", "while_loop", "cond",
+                     "switch", "associative_scan"}
+
+
+def _suppressions(lines: Sequence[str]) -> Dict[int, Set[str]]:
+    """1-based line -> set of rule ids disabled at that line."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        out.setdefault(i, set()).update(rules)       # same line
+        out.setdefault(i + 1, set()).update(rules)   # line below a bare
+        # comment line; harmless extra key when the comment is trailing
+    return out
+
+
+def _is_test_file(path: Path) -> bool:
+    return path.name.startswith("test_") or "tests" in path.parts
+
+
+class _Lint(ast.NodeVisitor):
+    def __init__(self, path: Path, lines: Sequence[str]):
+        self.path = path
+        self.lines = lines
+        self.suppress = _suppressions(lines)
+        self.findings: List[Finding] = []
+        self.is_test = _is_test_file(path)
+        # names of functions handed to scan/fori_loop/... in this module
+        self.traced_names: Set[str] = set()
+        self._jit_depth = 0
+
+    # ---- plumbing --------------------------------------------------------
+
+    def _emit(self, rule_id: str, node: ast.AST, message: str,
+              fix_hint: str = ""):
+        line = getattr(node, "lineno", 0)
+        suppressed = rule_id in self.suppress.get(line, set())
+        self.findings.append(make_finding(
+            rule_id, f"{self.path}:{line}", message, fix_hint,
+            suppressed=suppressed))
+
+    @staticmethod
+    def _dotted(node) -> str:
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+        return ".".join(reversed(parts))
+
+    # ---- pre-scan: which local defs are traced bodies --------------------
+
+    def collect_traced(self, tree: ast.AST):
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = self._dotted(node.func)
+            tail = name.rsplit(".", 1)[-1]
+            if tail in _TRACED_CONSUMERS:
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        self.traced_names.add(arg.id)
+
+    def _in_traced(self) -> bool:
+        return self._jit_depth > 0
+
+    # ---- visitors --------------------------------------------------------
+
+    def _handle_def(self, node):
+        traced = node.name in self.traced_names
+        for dec in node.decorator_list:
+            d = ast.dump(dec)
+            if "jit" in d or "pmap" in d or "shard_map" in d:
+                traced = True
+        if traced:
+            self._jit_depth += 1
+            self.generic_visit(node)
+            self._jit_depth -= 1
+        else:
+            self.generic_visit(node)
+
+    visit_FunctionDef = _handle_def
+    visit_AsyncFunctionDef = _handle_def
+
+    def visit_Call(self, node: ast.Call):
+        name = self._dotted(node.func)
+        tail = name.rsplit(".", 1)[-1]
+
+        if tail == "inv" and ".linalg." in f".{name}.":
+            self._emit("SRC001", node,
+                       f"explicit matrix inverse '{name}(...)'",
+                       "factor once (cholesky) and use cho_solve / "
+                       "triangular_solve")
+
+        if tail == "PRNGKey" and not self.is_test:
+            if node.args and isinstance(node.args[0], ast.Constant):
+                self._emit("SRC002", node,
+                           f"hard-coded PRNGKey({node.args[0].value!r}) "
+                           "outside tests",
+                           "thread the key from the caller, or suppress "
+                           "where the fixed seed is the contract")
+
+        if self._in_traced():
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in _HOST_SYNC_NAMES and node.args):
+                self._emit("SRC003", node,
+                           f"'{node.func.id}()' on a traced value inside "
+                           "a jitted/scanned body forces a host sync",
+                           "keep host conversions outside the traced "
+                           "region")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in _HOST_SYNC_ATTRS):
+                root = self._dotted(node.func)
+                if node.func.attr == "item" or root.startswith(("np.",
+                                                                "numpy.")):
+                    self._emit("SRC003", node,
+                               f"'{root}(...)' inside a jitted/scanned "
+                               "body forces a host sync",
+                               "return the value and convert after the "
+                               "traced call")
+
+        for kw in node.keywords:
+            if (kw.arg == "exit_reduce"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value != "ordered"):
+                self._emit("DET001", node,
+                           f"exit_reduce={kw.value.value!r}: arrival-order "
+                           "reduction breaks bit-exact session replay",
+                           "use exit_reduce='ordered' (or suppress where "
+                           "throughput deliberately wins)")
+
+        self.generic_visit(node)
+
+
+def check_source(paths: Union[str, Path, Iterable]) -> List[Finding]:
+    """Lint ``*.py`` under the given file/dir paths (SRC/DET rules)."""
+    if isinstance(paths, (str, Path)):
+        paths = [paths]
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    findings: List[Finding] = []
+    for f in files:
+        try:
+            text = f.read_text()
+            tree = ast.parse(text, filename=str(f))
+        except (OSError, SyntaxError) as e:
+            findings.append(make_finding(
+                "SRC003", f"{f}:0", f"unparseable source: {e}",
+                "fix the syntax error"))
+            continue
+        lint = _Lint(f, text.splitlines())
+        lint.collect_traced(tree)
+        lint.visit(tree)
+        findings.extend(lint.findings)
+    return findings

@@ -24,13 +24,13 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1, "token": 0,
-}
+from repro.analysis import optable
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# shared op-table (DESIGN.md §15): dtype widths, shape syntax, operand
+# splitting and the collective list live in ``optable`` so this walker,
+# roofline's collective extraction, and the lint pass cannot drift
+_DTYPE_BYTES = optable.DTYPE_BYTES
+_SHAPE_RE = optable.SHAPE_RE
 _COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-\$]+)\s*(?:\(|\.)")
 _OP_LINE_RE = re.compile(
     r"^\s*(ROOT\s+)?%([\w\.\-\$]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*?)\)(.*)$")
@@ -42,63 +42,12 @@ _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _LHS_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
 
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-_SKIP_BYTES = {
-    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
-    "while", "conditional", "call", "after-all", "partition-id",
-    "replica-id", "iota",
-}
+_COLLECTIVES = optable.COLLECTIVES
+_SKIP_BYTES = optable.SKIP_BYTES
 
-
-def _split_operands(opnds: str) -> List[str]:
-    """Operand list -> operand NAMES, robust to typed operand syntax.
-
-    Modern HLO text types every operand (``f32[64,64]{1,0} %lhs``), so a
-    naive ``split(",")`` breaks inside ``[64,64]``/``{1,0}`` and shape
-    lookups silently miss (a dot's contracting dims then collapse to 1 —
-    the bug behind under-counted scan FLOPs). Split only at bracket depth
-    0 and keep each piece's trailing token (the ``%name``; bare tokens
-    like ``parameter(0)``'s index pass through unchanged).
-    """
-    parts: List[str] = []
-    depth, cur = 0, []
-    for ch in opnds:
-        if ch in "([{":
-            depth += 1
-        elif ch in ")]}":
-            depth -= 1
-        if ch == "," and depth <= 0:
-            parts.append("".join(cur))
-            cur = []
-        else:
-            cur.append(ch)
-    parts.append("".join(cur))
-    out = []
-    for p in parts:
-        p = p.strip()
-        if p:
-            out.append(p.split()[-1].lstrip("%"))
-    return out
-
-
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for m in _SHAPE_RE.finditer(type_str):
-        n = 1
-        if m.group(2):
-            for d in m.group(2).split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES.get(m.group(1), 4)
-    return total
-
-
-def _first_shape(type_str: str) -> Tuple[str, List[int]]:
-    m = _SHAPE_RE.search(type_str)
-    if not m:
-        return "f32", []
-    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
-    return m.group(1), dims
+_split_operands = optable.split_operands
+_type_bytes = optable.type_bytes
+_first_shape = optable.first_shape
 
 
 @dataclass

@@ -1,0 +1,129 @@
+"""Shared op-table for the repo's program walkers.
+
+Three consumers parse XLA/JAX programs and must agree on primitive
+coverage (DESIGN.md §15):
+
+  * ``analysis/hlo_cost.py``   — trip-count-aware HLO text cost walker,
+  * ``analysis/roofline.py``   — collective-byte extraction from HLO text,
+  * ``analysis/check/``        — the jaxpr numeric-safety lint (Pass 1).
+
+Before this module each carried its own dtype table / shape regex /
+operand splitter, and they HAD drifted (hlo_cost knew ``token``, roofline
+did not). Everything shape- or primitive-classification-flavoured lives
+here now, so cost analysis and lint cannot diverge on what an op is.
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Tuple
+
+# ---------------------------------------------------------------------------
+# HLO text side: dtype widths, shape syntax, operand splitting
+# ---------------------------------------------------------------------------
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1, "token": 0,
+}
+
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# opcodes whose operands/outputs carry no HBM traffic of their own
+SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "iota",
+}
+
+
+def split_operands(opnds: str) -> List[str]:
+    """Operand list -> operand NAMES, robust to typed operand syntax.
+
+    Modern HLO text types every operand (``f32[64,64]{1,0} %lhs``), so a
+    naive ``split(",")`` breaks inside ``[64,64]``/``{1,0}`` and shape
+    lookups silently miss (a dot's contracting dims then collapse to 1 —
+    the bug behind under-counted scan FLOPs). Split only at bracket depth
+    0 and keep each piece's trailing token (the ``%name``; bare tokens
+    like ``parameter(0)``'s index pass through unchanged).
+    """
+    parts: List[str] = []
+    depth, cur = 0, []
+    for ch in opnds:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth <= 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    out = []
+    for p in parts:
+        p = p.strip()
+        if p:
+            out.append(p.split()[-1].lstrip("%"))
+    return out
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    """One ``dtype[d0,d1,...]`` match -> byte count."""
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def type_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple-shaped) HLO type string."""
+    return sum(shape_bytes(m.group(1), m.group(2))
+               for m in SHAPE_RE.finditer(type_str))
+
+
+def first_shape(type_str: str) -> Tuple[str, List[int]]:
+    m = SHAPE_RE.search(type_str)
+    if not m:
+        return "f32", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+# ---------------------------------------------------------------------------
+# jaxpr side: primitive classification for the numeric-safety pass
+# ---------------------------------------------------------------------------
+
+# every jnp.dot / jnp.einsum / jnp.matmul lowers here; the
+# ``preferred_element_type`` param is the accumulation-dtype contract
+CONTRACTION_PRIMITIVES = frozenset({"dot_general"})
+
+# axis-carrying reductions (the ``axes`` param names the reduced dims) —
+# what NUM003 inspects for unmasked frame-axis folds
+REDUCE_PRIMITIVES = frozenset({
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+    "reduce_and", "reduce_or", "reduce_xor", "argmax", "argmin",
+    "reduce_precision",  # never reduces an axis, listed for completeness
+}) - {"reduce_precision"}
+
+# the LU family: jnp.linalg.inv / .solve / .slogdet all lower through
+# ``lu`` — the exact op class the DESIGN.md §9 ruling bans from entry
+# points (near-singular Σ poisons the factorisation; Cholesky +
+# triangular solves are the sanctioned path)
+LU_FAMILY_PRIMITIVES = frozenset({"lu"})
+
+# sanctioned factorisations (never flagged)
+SANCTIONED_FACTOR_PRIMITIVES = frozenset(
+    {"cholesky", "triangular_solve", "eigh", "eig"})
+
+# dtypes whose accumulation must be widened explicitly
+LOW_PRECISION_DTYPES = frozenset(
+    {"bfloat16", "float16", "float8_e4m3fn", "float8_e5m2"})
+
+# dtype-preserving pass-through primitives the NUM001 origin walk may
+# look through to find a contraction operand's pre-promotion dtype
+CAST_PRIMITIVES = frozenset({"convert_element_type"})

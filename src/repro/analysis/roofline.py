@@ -19,6 +19,8 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
+from repro.analysis import optable
+
 # ---------------------------------------------------------------------------
 # Hardware constants (TPU v5e)
 # ---------------------------------------------------------------------------
@@ -35,24 +37,13 @@ class Hardware:
 
 HW = Hardware()
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
-}
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+# shared op-table (DESIGN.md §15): this module used to carry its own
+# dtype/shape/collective copies and had already drifted from hlo_cost's
+# (no ``token`` entry here); both walkers now read ``optable``
+_DTYPE_BYTES = optable.DTYPE_BYTES
+_COLLECTIVES = optable.COLLECTIVES
+_SHAPE_RE = optable.SHAPE_RE
+_shape_bytes = optable.shape_bytes
 
 
 def _line_output_bytes(line: str) -> int:

@@ -88,22 +88,45 @@ def train_plda(x, labels) -> PLDA:
                 jnp.asarray(Sw + 1e-6 * eye, f32))
 
 
+def _spd_inverse(M):
+    """SPD inverse + logdet via Cholesky (identity-RHS ``cho_solve``).
+
+    The sanctioned path (DESIGN.md §9, rule NUM002): ``jnp.linalg.inv``
+    pivots an LU factorisation, which is exactly what goes unstable on
+    the near-singular within-class covariances PLDA sees after LDA;
+    the Cholesky solve is backward-stable on the same inputs. The solve
+    result is symmetrised (fp round-off breaks exact symmetry) so the
+    quadratic forms downstream stay symmetric.
+    """
+    chol = jnp.linalg.cholesky(M)
+    eye = jnp.eye(M.shape[-1], dtype=M.dtype)
+    Minv = jax.scipy.linalg.cho_solve((chol, True), eye)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
+    return 0.5 * (Minv + Minv.T), logdet
+
+
 def _plda_coeffs(plda: PLDA):
     """(Q, P, const) of the two-covariance LLR quadratic form:
 
     llr = log N([x;y]; 0, [[T, B],[B, T]]) - log N([x;y]; 0, [[T, 0],[0, T]])
     with T = B + W; expands to 0.5 x'Qx + 0.5 y'Qy + x'Py + const.
+
+    T = B + W is SPD and so is its Schur complement S = T - B T^{-1} B
+    (the joint same-speaker covariance [[T, B],[B, T]] is PD whenever W
+    is), so both inverses run through Cholesky, and the joint logdet
+    follows from the Schur determinant identity
+    det([[T, B],[B, T]]) = det(T) det(S) — no LU-based ``slogdet`` of
+    the 2D x 2D block matrix.
     """
     B, W = plda.B, plda.W
     T = B + W
-    Tinv = jnp.linalg.inv(T)
+    Tinv, logdet_T = _spd_inverse(T)
     S = T - B @ Tinv @ B          # Schur complement
-    Sinv = jnp.linalg.inv(S)
+    Sinv, logdet_S = _spd_inverse(S)
     Q = Tinv - Sinv               # x'Qx coefficient
     P = Sinv @ B @ Tinv           # cross coefficient
-    _, logdet_joint = jnp.linalg.slogdet(jnp.block([[T, B], [B, T]]))
-    _, logdet_ind = jnp.linalg.slogdet(T)
-    const = -0.5 * (logdet_joint - 2.0 * logdet_ind)
+    # logdet_joint - 2 logdet_T == (logdet_T + logdet_S) - 2 logdet_T
+    const = -0.5 * (logdet_S - logdet_T)
     return Q, P, const
 
 

@@ -122,11 +122,15 @@ def posterior(model: TVModel, pre: Precomp, n, f, mean_only: bool = False,
             Lp = jax.lax.psum(Lp, axis)
         L = jnp.eye(R, dtype=f32) + ops.unpack_symmetric(Lp, R)
     else:
-        Ld = jnp.einsum("uc,crs->urs", n, pre.U)
+        # f32 accumulation pinned explicitly (rule NUM001): n may arrive
+        # bf16 under the mixed-precision E-step
+        Ld = jnp.einsum("uc,crs->urs", n, pre.U,
+                        preferred_element_type=f32)
         if axis is not None:
             Ld = jax.lax.psum(Ld, axis)
         L = jnp.eye(R, dtype=f32) + Ld
-    rhs = jnp.einsum("cdr,ucd->ur", pre.Pj, f)
+    rhs = jnp.einsum("cdr,ucd->ur", pre.Pj, f,
+                     preferred_element_type=f32)
     if axis is not None:
         rhs = jax.lax.psum(rhs, axis)
     rhs = model.prior[None] + rhs
@@ -214,9 +218,11 @@ def em_accumulate(model: TVModel, pre: Precomp, n, f,
         H = ops.unpack_symmetric(jnp.sum(PPp, axis=0), model.rank)
     else:
         PP = Phi + phi[:, :, None] * phi[:, None, :]
-        A = jnp.einsum("uc,urs->crs", n, PP)
+        # f32 accumulation pinned (rule NUM001): n/f may arrive bf16
+        # under the mixed-precision E-step
+        A = jnp.einsum("uc,urs->crs", n, PP, preferred_element_type=f32)
         H = jnp.sum(PP, axis=0)
-    B = jnp.einsum("ucd,ur->cdr", f, phi)
+    B = jnp.einsum("ucd,ur->cdr", f, phi, preferred_element_type=f32)
     return EMAccum(A=A, B=B, h=jnp.sum(phi, axis=0), H=H,
                    n_tot=jnp.sum(n, axis=0),
                    n_utts=jnp.asarray(n.shape[0], f32))

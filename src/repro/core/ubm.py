@@ -68,8 +68,12 @@ def diag_coeffs(gmm: DiagGMM) -> Tuple[jax.Array, jax.Array, jax.Array]:
 
 def diag_loglik_from_coeffs(x, const, lin, quad) -> jax.Array:
     """x: [F, D] with ``diag_coeffs`` output (possibly a component shard)
-    -> [F, C] per-component log-likelihood (+ log weight)."""
-    return (const[None] + x @ lin + (x * x) @ quad).astype(f32)
+    -> [F, C] per-component log-likelihood (+ log weight). Accumulation
+    is pinned to f32 (rule NUM001): bf16 feature chunks must widen in
+    the MXU, not carry a bf16 partial sum."""
+    return (const[None]
+            + jnp.dot(x, lin, preferred_element_type=f32)
+            + jnp.dot(x * x, quad, preferred_element_type=f32)).astype(f32)
 
 
 def diag_loglik(gmm: DiagGMM, x) -> jax.Array:
@@ -80,7 +84,16 @@ def diag_loglik(gmm: DiagGMM, x) -> jax.Array:
 def full_precisions(gmm: FullGMM) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """(const [C], lin [C, D], P [C, D, D]) for the vec-trick evaluation."""
     chol = jnp.linalg.cholesky(gmm.covs)
-    P = jnp.linalg.inv(gmm.covs)
+    # precision via identity-RHS cho_solve on the factor already in hand
+    # (DESIGN.md §9 / rule NUM002: LU-based `inv` is banned — it is the
+    # path that poisoned precomputes on near-singular Σ in PR 4), then
+    # symmetrised: the solve round-off would otherwise leak asymmetry
+    # into the vec-trick quadratic form
+    D = gmm.covs.shape[-1]
+    P = jax.scipy.linalg.cho_solve(
+        (chol, True),
+        jnp.broadcast_to(jnp.eye(D, dtype=gmm.covs.dtype), gmm.covs.shape))
+    P = 0.5 * (P + P.transpose(0, 2, 1))
     logdet = 2.0 * jnp.sum(
         jnp.log(jnp.diagonal(chol, axis1=1, axis2=2)), axis=1)
     lin = jnp.einsum("cij,cj->ci", P, gmm.means)

@@ -54,6 +54,8 @@ def sharded_align_stats(cfg, mesh, diag_gmm, full_pre, feats_c,
         chunk=0, rescore=getattr(cfg, "rescore", "dense"))
     pack = EN.UBMPack(None, diag_gmm, full_pre, U.rescore_pack(full_pre),
                       U.align_pack(full_pre))
+    # macro-step throughput beats replayability here (DESIGN.md §11)
+    # repro-check: disable=DET001
     (tot,), nf = EN.stream(spec, pack, feats_c, None,
                            (EN.TotalsAccum(spec, D),), collect_nf=True,
                            mesh=mesh, exit_reduce="psum")
@@ -88,6 +90,7 @@ def em_macro_step(cfg, mesh, ubm_w, ubm_means, ubm_covs, T, Sigma, prior,
               EN.TVMAccum(model, pre,
                           estep_dtype=getattr(cfg, "estep_dtype",
                                               "float32")))
+    # repro-check: disable=DET001  (same throughput-over-replay tradeoff)
     (tot, acc), _ = EN.stream(spec, EN.pack_ubm(ubm), feats, None, accums,
                               mesh=mesh, exit_reduce="psum")
     C, D = cfg.n_components, cfg.feat_dim

@@ -57,12 +57,14 @@ def main():
                                  save_interval=args.ckpt_interval)
         rep = run_supervised(
             init_state_fn=lambda: api.init_state(
+                # repro-check: disable=SRC002
                 cfg, jax.random.PRNGKey(0), max_seq=args.seq),
             train_step_fn=train_step,
             data_factory=lambda: TokenPipeline(pipe_cfg),
             n_steps=args.steps, ckpt=ckpt)
         print(f"done at step {rep.final_step}; restarts={rep.n_restarts}")
     else:
+        # repro-check: disable=SRC002
         state = api.init_state(cfg, jax.random.PRNGKey(0), max_seq=args.seq)
         pipe = TokenPipeline(pipe_cfg)
         for _ in range(args.steps):
